@@ -1,0 +1,1 @@
+"""Benchmarks — one section per paper table/figure (see run.py)."""

@@ -1,0 +1,66 @@
+"""Fig. 6 reproduction: 6-stage pipeline breakdown of PDPU vs dot size N.
+
+Per-stage latency/area from the calibrated generator model, the worst-stage
+clock, and the throughput improvement of pipelining vs the combinational
+unit (paper: 4.4x / 4.6x, worst stage ~0.37 ns, S1 decode dominating area,
+S2/S4 growing fastest with N).
+"""
+from __future__ import annotations
+
+from repro.core import hwmodel
+from repro.core.formats import P13_2, P16_2, PDPUConfig
+
+STAGES = ("S1_decode", "S2_multiply", "S3_align", "S4_accumulate",
+          "S5_normalize", "S6_encode")
+
+
+def rows():
+    out = []
+    for N in (2, 4, 8, 16):
+        cfg = PDPUConfig(P13_2, P16_2, N=N, w_m=14)
+        r = hwmodel.report(cfg)
+        rec = {"N": N, "comb_delay_ns": r.delay_ns,
+               "worst_stage_ns": max(r.stage_delay_ns),
+               "fmax_ghz": r.fmax_ghz,
+               "throughput_gain": r.delay_ns / max(r.stage_delay_ns),
+               "area_um2": r.area_um2}
+        for s, d, a in zip(STAGES, r.stage_delay_ns, r.stage_area_um2):
+            rec[f"{s}_ns"] = d
+            rec[f"{s}_um2"] = a
+        out.append(rec)
+    return out
+
+
+def claims_check(table):
+    n4 = next(r for r in table if r["N"] == 4)
+    n8 = next(r for r in table if r["N"] == 8)
+    return {
+        # worst stage ~0.37ns -> up to ~2.7 GHz (paper §IV-B)
+        "worst_stage_near_0p37ns": abs(n4["worst_stage_ns"] - 0.37) < 0.06,
+        "fmax_above_2_5ghz": n4["fmax_ghz"] > 2.5,
+        "throughput_gain_over_4x": n4["throughput_gain"] > 4.0,
+        # S1 decoders dominate area
+        "s1_area_dominates": n4["S1_decode_um2"] == max(
+            n4[f"{s}_um2"] for s in STAGES),
+        # S2/S4 latency grows with N (tree depth)
+        "s2_s4_grow_with_n": (n8["S2_multiply_ns"] >= n4["S2_multiply_ns"]
+                              and n8["S4_accumulate_ns"] > n4["S4_accumulate_ns"]),
+    }
+
+
+def main():
+    table = rows()
+    cols = ["N", "comb_delay_ns", "worst_stage_ns", "fmax_ghz",
+            "throughput_gain", "area_um2"] + \
+        [f"{s}_ns" for s in STAGES] + [f"{s}_um2" for s in STAGES]
+    print(",".join(cols))
+    for r in table:
+        print(",".join(f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+    for k, v in claims_check(table).items():
+        print(f"claim,{k},{'PASS' if v else 'FAIL'}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

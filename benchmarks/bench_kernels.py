@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks (CPU interpret wall time is NOT TPU performance;
+the derived column is the analytic TPU roofline time for the same call:
+max(bytes/HBM_bw, flops/MXU) from the kernel's own tile arithmetic)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import P13_2, P16_2, P8_2, PDPUConfig
+from repro.kernels import ops
+from repro.launch.mesh import HW
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def rows(rng=None):
+    rng = rng or np.random.default_rng(0)
+    out = []
+
+    # codec kernels
+    for fmt, shape in [(P16_2, (1024, 1024)), (P8_2, (1024, 1024))]:
+        codes = jnp.asarray(rng.integers(0, 1 << fmt.n, shape), jnp.int32)
+        us = _time(lambda c: ops.decode(c, fmt), codes)
+        n = np.prod(shape)
+        tpu_us = max(n * (fmt.storage_bits // 8 + 4) / HW["hbm_bw"],
+                     n * 20 / (HW["peak_flops_bf16"] / 2)) * 1e6
+        out.append((f"decode_{fmt}_{shape[0]}x{shape[1]}", us, tpu_us))
+        x = jnp.asarray(rng.normal(0, 1, shape), jnp.float32)
+        us = _time(lambda v: ops.encode(v, fmt), x)
+        out.append((f"encode_{fmt}_{shape[0]}x{shape[1]}", us, tpu_us))
+
+    # fused matmul kernel (posit-in, posit-out)
+    M = K = N = 512
+    a = jnp.asarray(rng.integers(0, 1 << 16, (M, K)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 1 << 16, (K, N)), jnp.int32)
+    a = jnp.where(a == P16_2.nar_code, 0, a)
+    b = jnp.where(b == P16_2.nar_code, 0, b)
+    us = _time(lambda x, y: ops.fused_matmul(x, y, P16_2, P16_2, P16_2,
+                                             bm=128, bn=128, bk=256), a, b)
+    flops = 2 * M * K * N
+    byts = (M * K + K * N) * 2 + M * N * 2
+    tpu_us = max(flops / HW["peak_flops_bf16"], byts / HW["hbm_bw"]) * 1e6
+    out.append((f"fused_matmul_{M}x{K}x{N}_p16", us, tpu_us))
+
+    # bit-exact PDPU GEMM kernel (VPU-bound fidelity path)
+    cfg = PDPUConfig(P13_2, P16_2, N=4, w_m=14)
+    a = jnp.asarray(rng.integers(0, 1 << 13, (64, 32)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 1 << 13, (32, 64)), jnp.int32)
+    us = _time(lambda x, y: ops.pdpu_matmul(x, y, cfg, bm=32, bn=32), a, b)
+    # ~200 int ops per MAC on the VPU (8-wide int32 lanes x 128)
+    vpu_ops = 64 * 64 * 32 * 200
+    tpu_us = vpu_ops / (HW["peak_flops_bf16"] / 16) * 1e6
+    out.append(("pdpu_exact_gemm_64x32x64", us, tpu_us))
+    return out
+
+
+def main():
+    print("kernel,us_per_call_cpu_interpret,us_per_call_tpu_roofline")
+    for name, us, tpu in rows():
+        print(f"{name},{us:.0f},{tpu:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Table I reproduction: accuracy of every dot-product unit on the
+conv1-shaped workload + area/delay/power/efficiency columns.
+
+Accuracy is *computed* (bit-faithful emulations vs the FP64 reference);
+PDPU hardware columns come from the calibrated generator cost model; the
+non-PDPU hardware columns are the paper's own measured values (we cannot
+synthesize RTL here — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import discrete, hwmodel
+from repro.core.formats import (P10_2, P13_2, P16_2, PDPUConfig)
+from .workload import conv1_workload
+
+
+def hit_rate_pct(y, y_ref, tau: float = 0.01) -> float:
+    """Fraction of outputs within relative tolerance tau of the FP64 ref.
+
+    The paper's "Accuracy" column is consistent with a threshold metric
+    (its quire row is below 100% — input quantization alone fails some
+    outputs), so we report this alongside the mean-relative metric."""
+    import numpy as np
+    rel = np.abs(y - y_ref) / np.maximum(np.abs(y_ref), 1e-300)
+    return float(100.0 * (rel < tau).mean())
+
+
+def rows(n_positions: int = 96, seed: int = 0):
+    a, b = conv1_workload(n_positions=n_positions, seed=seed)
+    exact = (a * b).sum(-1)  # FP64 reference
+
+    out = []
+
+    def add(name, formats, N, wm, y, hw_row, modeled):
+        out.append({
+            "name": name, "formats": formats, "N": N, "w_m": wm,
+            "accuracy_pct": discrete.accuracy_pct(y, exact),
+            "hit_pct": hit_rate_pct(y, exact),
+            "area_um2": hw_row[0], "delay_ns": hw_row[1], "power_mw": hw_row[2],
+            "gops": N / hw_row[1],
+            "area_eff": (N / hw_row[1]) / (hw_row[0] * 1e-6),
+            "energy_eff": (N / hw_row[1]) / (hw_row[2] * 1e-3),
+            "hw_source": "model" if modeled else "paper-reported",
+        })
+
+    t0 = time.perf_counter()
+    # --- discrete float DPUs (FPnew-style) --------------------------------
+    bl = hwmodel.PAPER_TABLE1_BASELINES
+    add("FPnew DPU", "FP32", 4, None,
+        discrete.dpu_discrete(a, b, 4, discrete.round_fp32),
+        bl["FPnew DPU FP32"][2:], False)
+    add("FPnew DPU", "FP16", 4, None,
+        discrete.dpu_discrete(a, b, 4, discrete.round_fp16),
+        bl["FPnew DPU FP16"][2:], False)
+    # --- discrete posit DPU (PACoGen-style) --------------------------------
+    add("PACoGen DPU", "P(16,2)", 4, None,
+        discrete.dpu_discrete(a, b, 4, discrete.make_round_posit(P16_2)),
+        bl["PACoGen DPU P(16,2)"][2:], False)
+
+    # --- proposed PDPU variants (Table I block) -----------------------------
+    pdpu_rows = [
+        ("P(16/16,2)", PDPUConfig(P16_2, P16_2, N=4, w_m=14)),
+        ("P(13/16,2)", PDPUConfig(P13_2, P16_2, N=4, w_m=14)),
+        ("P(13/16,2)", PDPUConfig(P13_2, P16_2, N=8, w_m=14)),
+        ("P(10/16,2)", PDPUConfig(P10_2, P16_2, N=8, w_m=14)),
+        ("P(13/16,2)", PDPUConfig(P13_2, P16_2, N=8, w_m=10)),
+    ]
+    for fmts, cfg in pdpu_rows:
+        r = hwmodel.report(cfg)
+        add("Proposed PDPU", fmts, cfg.N, cfg.w_m,
+            discrete.dpu_pdpu_fused(a, b, cfg),
+            (r.area_um2, r.delay_ns, r.power_mw), True)
+
+    # --- quire PDPU ----------------------------------------------------------
+    qcfg = PDPUConfig(P13_2, P16_2, N=4, w_m=256)
+    rq = hwmodel.report(qcfg)
+    add("Quire PDPU", "P(13/16,2)", 4, 256,
+        discrete.dpu_pdpu_fused(a, b, qcfg),
+        (rq.area_um2, rq.delay_ns, rq.power_mw), True)
+
+    # --- FMA cascades ---------------------------------------------------------
+    add("FPnew FMA", "FP32", 1, None,
+        discrete.dpu_fma_cascade(a, b, discrete.round_fp32),
+        bl["FPnew FMA FP32"][2:], False)
+    add("FPnew FMA", "FP16", 1, None,
+        discrete.dpu_fma_cascade(a, b, discrete.round_fp16),
+        bl["FPnew FMA FP16"][2:], False)
+    add("Posit FMA", "P(16,2)", 1, None,
+        discrete.dpu_fma_cascade(a, b, discrete.make_round_posit(P16_2)),
+        bl["Posit FMA P(16,2)"][2:], False)
+    wall = time.perf_counter() - t0
+    return out, wall
+
+
+def claims_check(table):
+    """The paper's orderings that must reproduce (EXPERIMENTS.md)."""
+    by = {}
+    for r in table:
+        by[(r["name"], r["formats"], r["N"], r["w_m"])] = r
+    fp32 = by[("FPnew DPU", "FP32", 4, None)]
+    fp16 = by[("FPnew DPU", "FP16", 4, None)]
+    paco = by[("PACoGen DPU", "P(16,2)", 4, None)]
+    p16 = by[("Proposed PDPU", "P(16/16,2)", 4, 14)]
+    p1316 = by[("Proposed PDPU", "P(13/16,2)", 4, 14)]
+    p1016 = by[("Proposed PDPU", "P(10/16,2)", 8, 14)]
+    w10 = by[("Proposed PDPU", "P(13/16,2)", 8, 10)]
+    quire = by[("Quire PDPU", "P(13/16,2)", 4, 256)]
+    fma16 = by[("Posit FMA", "P(16,2)", 1, None)]
+    checks = {
+        # posit-16 ~ FP32 > FP16 (paper: 100 / 98.86-99.10 / 91.21); the
+        # paper's 8-point FP16 collapse needs its (unavailable) real data —
+        # both our metrics reproduce the ordering, not that magnitude.
+        "fp32_beats_fp16": fp32["hit_pct"] - fp16["hit_pct"] > 1.0,
+        "p16_close_to_fp32": fp32["accuracy_pct"] - p16["accuracy_pct"] < 2.0,
+        "p16_beats_fp16": (p16["accuracy_pct"] > fp16["accuracy_pct"]
+                           and p16["hit_pct"] > fp16["hit_pct"]),
+        # fused PDPU > discrete PACoGen and > FMA cascade at same format
+        "fused_beats_discrete": (p16["accuracy_pct"] >= paco["accuracy_pct"]
+                                 and p16["hit_pct"] >= paco["hit_pct"]),
+        "fused_beats_fma": p16["hit_pct"] > fma16["hit_pct"],
+        # w_m=14 within 0.5% of quire (paper: 98.69 vs 98.79)
+        "wm14_matches_quire": (abs(p1316["accuracy_pct"] - quire["accuracy_pct"]) < 0.5
+                               and abs(p1316["hit_pct"] - quire["hit_pct"]) < 1.0),
+        # inappropriate format/width costs ~10% accuracy (paper §IV-A)
+        "p10_drops": p1316["hit_pct"] - p1016["hit_pct"] > 5.0,
+        "w10_drops": p1316["hit_pct"] - w10["hit_pct"] > 2.0,
+        # paper's headline hardware claims, from the calibrated model:
+        "area_saving_vs_pacogen": 1 - p1316["area_um2"] / paco["area_um2"] > 0.35,
+        "delay_saving_vs_pacogen": 1 - p1316["delay_ns"] / paco["delay_ns"] > 0.55,
+        "power_saving_vs_pacogen": 1 - p1316["power_mw"] / paco["power_mw"] > 0.60,
+        "area_eff_vs_quire_5x": p1316["area_eff"] / quire["area_eff"] > 4.0,
+        "energy_eff_vs_quire_2x": p1316["energy_eff"] / quire["energy_eff"] > 1.8,
+        "area_eff_vs_posit_fma_3x": p1316["area_eff"] / fma16["area_eff"] > 2.5,
+    }
+    return checks
+
+
+def main(csv=True):
+    table, wall = rows()
+    if csv:
+        print("unit,formats,N,w_m,accuracy_pct,hit_pct,area_um2,delay_ns,"
+              "power_mw,gops,area_eff,energy_eff,hw_source")
+        for r in table:
+            print(f"{r['name']},{r['formats']},{r['N']},{r['w_m']},"
+                  f"{r['accuracy_pct']:.2f},{r['hit_pct']:.2f},"
+                  f"{r['area_um2']:.0f},"
+                  f"{r['delay_ns']:.2f},{r['power_mw']:.2f},{r['gops']:.2f},"
+                  f"{r['area_eff']:.0f},{r['energy_eff']:.0f},{r['hw_source']}")
+    checks = claims_check(table)
+    for k, v in checks.items():
+        print(f"claim,{k},{'PASS' if v else 'FAIL'}")
+    print(f"table1,wall_seconds,{wall:.1f}")
+    return table, checks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits,
+per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS / HLO_FLOPS usefulness ratio, and a
+one-line "what would move the dominant term" note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+NOTES = {
+    ("compute",): "raise arithmetic intensity: larger per-device tiles, "
+                  "fewer remat recomputes, bf16 throughout the MXU path",
+    ("memory",): "cut HBM bytes: posit-coded weights/KV (2-4x), fuse "
+                 "elementwise chains, wider microbatch to reuse weights",
+    ("collective",): "cut wire bytes: bf16/posit-compressed collectives, "
+                     "shard so gathers move smaller operands, overlap with "
+                     "compute via latency hiding",
+}
+
+
+def load(dirpath="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    terms = {"compute": t["compute_s"], "memory": t["memory_s"],
+             "collective": t["collective_s"]}
+    dom = t["dominant"]
+    bound = max(terms.values())
+    useful = t.get("useful_flops_ratio")
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh_tag"],
+        "compute_s": terms["compute"], "memory_s": terms["memory"],
+        "collective_s": terms["collective"], "dominant": dom,
+        "bound_s": bound,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": terms["compute"] / bound if bound else None,
+        "note": NOTES[(dom,)],
+    }
+
+
+def main(dirpath="experiments/dryrun"):
+    rows = [fmt_row(r) for r in load(dirpath)]
+    if not rows:
+        print("roofline,no dryrun artifacts found (run repro.launch.dryrun)")
+        return []
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "roofline_fraction,useful_flops_ratio")
+    for r in rows:
+        uf = f"{r['useful_flops_ratio']:.3f}" if r["useful_flops_ratio"] else "-"
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['compute_s']:.4g},{r['memory_s']:.4g},"
+              f"{r['collective_s']:.4g},{r['dominant']},"
+              f"{r['roofline_fraction']:.3f},{uf}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table1     # one section
+
+Output is CSV-ish: `name,value[,derived]` lines plus `claim,<name>,PASS|FAIL`
+rows tying each section back to the paper's quantitative claims.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+SECTIONS = ("table1", "fig3", "fig6", "fused_vs_discrete", "kernels",
+            "roofline", "grad_compress")
+
+
+def _section(name):
+    print(f"\n===== {name} =====")
+    t0 = time.perf_counter()
+    if name == "table1":
+        from . import bench_table1
+        bench_table1.main()
+    elif name == "fig3":
+        from . import bench_fig3
+        bench_fig3.main()
+    elif name == "fig6":
+        from . import bench_fig6
+        bench_fig6.main()
+    elif name == "fused_vs_discrete":
+        from . import bench_fused_vs_discrete
+        bench_fused_vs_discrete.main()
+    elif name == "kernels":
+        from . import bench_kernels
+        bench_kernels.main()
+    elif name == "roofline":
+        from . import roofline
+        roofline.main()
+    elif name == "grad_compress":
+        from . import bench_grad_compress
+        bench_grad_compress.main()
+    else:
+        raise KeyError(name)
+    print(f"{name},section_seconds,{time.perf_counter() - t0:.1f}")
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SECTIONS)
+    for name in wanted:
+        _section(name)
+
+
+if __name__ == '__main__':
+    main()

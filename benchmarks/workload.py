@@ -1,0 +1,53 @@
+"""The paper's evaluation workload, synthesized.
+
+Table I evaluates every unit on "the activations, weights, and outputs of
+the first convolution layer of ResNet18 extracted in FP64".  No ImageNet /
+torchvision exists offline, so we synthesize tensors with the statistics
+that drive the comparison (DESIGN.md §2 records this substitution):
+
+  * activations: ImageNet-normalized pixels are strongly spatially
+    correlated (AR(1), rho ~ 0.98 across a 7x7x3 im2col window) with
+    per-patch contrast variation — zero-mean, unit-ish variance, heavy
+    shoulders (the Fig. 3 histogram shape);
+  * weights: He-scaled, zero-mean *per filter* (trained conv1 filters are
+    edge/color detectors — they nearly cancel on smooth patches, which is
+    what makes the output distribution cancellation-heavy and rounding
+    error visible, as in the paper's accuracy spread);
+  * dot products: the im2col rows of the 7x7/stride-2 conv, K = 147.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+K_CONV1 = 7 * 7 * 3          # 147 MACs per output (ResNet-style stem)
+OUT_CHANNELS = 64
+
+
+def conv1_workload(n_positions: int = 256, batch: int = 1, seed: int = 0,
+                   pad_to: int = 8, rho: float = 0.98):
+    """Returns (a, b) float64, row-aligned operand pairs for
+    M = batch * n_positions * 64 dot products of length K=147
+    (zero-padded to a chunk multiple — posit code 0 is exact zero)."""
+    rng = np.random.default_rng(seed)
+    n_patch = batch * n_positions
+    eps = rng.normal(0, 1, (n_patch, K_CONV1))
+    acts = np.zeros((n_patch, K_CONV1))
+    acts[:, 0] = eps[:, 0]
+    for k in range(1, K_CONV1):  # AR(1) spatial correlation
+        acts[:, k] = rho * acts[:, k - 1] + np.sqrt(1 - rho ** 2) * eps[:, k]
+    acts *= 1.0 + 0.5 * np.abs(rng.normal(0, 1, (n_patch, 1)))  # contrast
+    weights = rng.normal(0, np.sqrt(2.0 / K_CONV1), (OUT_CHANNELS, K_CONV1))
+    weights -= weights.mean(axis=1, keepdims=True)  # edge-detector-like
+    a = np.repeat(acts, OUT_CHANNELS, axis=0)          # [M, K]
+    b = np.tile(weights, (n_patch, 1))                 # [M, K]
+    pad = (-K_CONV1) % pad_to
+    if pad:
+        a = np.pad(a, ((0, 0), (0, pad)))
+        b = np.pad(b, ((0, 0), (0, pad)))
+    return a, b
+
+
+def dnn_value_histogram(seed: int = 0, n: int = 200_000):
+    """Samples of the activation distribution for Fig. 3."""
+    rng = np.random.default_rng(seed)
+    return 0.8 * rng.normal(0, 1.0, n) + 0.2 * rng.normal(0, 2.2, n)

@@ -1,0 +1,35 @@
+"""Serving with posit-compressed weights + KV cache (continuous batching).
+
+The KV cache is stored as P(8,2) codes (4x smaller than f32, 2x smaller
+than bf16) and decoded exactly on read — the PDPU storage-format win
+applied to the decode-bandwidth roofline.
+
+    PYTHONPATH=src python examples/serve_posit_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core.quant import policy_by_name
+from repro.models import api
+from repro.serve import Request, ServingEngine
+
+cfg = configs.get_smoke("command_r_35b").replace(
+    quant=policy_by_name("serve_p16_kv8"))
+params = api.init(jax.random.key(0), cfg)
+engine = ServingEngine(cfg, params, batch_slots=4, max_seq=96)
+rng = np.random.default_rng(0)
+for i in range(10):
+    engine.submit(Request(rid=i,
+                          prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+                          max_new_tokens=12))
+t0 = time.perf_counter()
+done = engine.run()
+dt = time.perf_counter() - t0
+tok = sum(len(r.out_tokens) for r in done)
+print(f"served {len(done)} requests / {tok} tokens in {dt:.2f}s "
+      f"({tok/dt:.1f} tok/s on CPU)")
+print(f"kv cache dtype: {engine.cache['k'].dtype} (posit P(8,2) codes)")
+print(f"sample continuation: {done[0].out_tokens}")

@@ -1,0 +1,47 @@
+"""End-to-end driver: train a small LM with the paper's mixed-precision
+posit quantization (P(13,2) operands, f32 wide accumulation — the PDPU
+contract) and compare against an unquantized run.
+
+    PYTHONPATH=src python examples/train_posit_lm.py --steps 200
+"""
+import argparse
+
+import jax
+
+from repro import configs
+from repro.core.quant import policy_by_name
+from repro.data import DataConfig, Pipeline
+from repro.models.config import ShapeConfig
+from repro.optim import adamw, cosine_schedule
+from repro.train import Trainer, TrainerConfig
+
+
+def run(quant: str, steps: int, arch: str):
+    cfg = configs.get_smoke(arch).replace(quant=policy_by_name(quant))
+    shape = ShapeConfig("ex", seq_len=128, global_batch=8, kind="train")
+    pipe = Pipeline(cfg, shape, DataConfig(seed=0))
+    opt = adamw(cosine_schedule(3e-3, warmup=steps // 10, total=steps))
+    tr = Trainer(cfg, shape, opt, pipe,
+                 TrainerConfig(total_steps=steps, log_every=max(steps // 10, 1),
+                               ckpt_every=steps, accum=2))
+    tr.run(jax.random.key(0))
+    return [h["loss"] for h in tr.history]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--arch", default="minitron_8b")
+    args = ap.parse_args()
+    base = run("none", args.steps, args.arch)
+    mixed = run("paper_mixed", args.steps, args.arch)
+    n = max(args.steps // 5, 1)
+    print(f"\nfinal loss (mean of last {n}):")
+    print(f"  float32      : {sum(base[-n:])/n:.4f}")
+    print(f"  P(13,2) mixed: {sum(mixed[-n:])/n:.4f}")
+    print("mixed-precision posit training tracks the float baseline "
+          "(paper §III-B / PositNN [26]).")
+
+
+if __name__ == "__main__":
+    main()

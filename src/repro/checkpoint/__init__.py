@@ -1,0 +1,2 @@
+"""Atomic sharded async checkpointing with elastic restore."""
+from .checkpoint import CheckpointManager  # noqa: F401

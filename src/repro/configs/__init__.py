@@ -1,0 +1,52 @@
+"""Architecture registry: the 10 assigned configs (+ paper workload).
+
+Each module defines CONFIG (the exact assigned architecture) and
+SMOKE (a reduced same-family config for CPU tests).  `get(name)` /
+`get_smoke(name)` / `ARCH_NAMES` are the public API; `shape_skips(name)`
+returns the assigned-shape cells this arch does not run, with reasons
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_NAMES = (
+    "command_r_35b",
+    "command_r_plus_104b",
+    "gemma3_4b",
+    "minitron_8b",
+    "hubert_xlarge",
+    "qwen3_moe_235b",
+    "deepseek_moe_16b",
+    "jamba_1_5_large",
+    "mamba2_1_3b",
+    "paligemma_3b",
+)
+
+_ALIASES = {n.replace("_", "-"): n for n in ARCH_NAMES}
+
+
+def _module(name: str):
+    name = _ALIASES.get(name, name)
+    if name not in ARCH_NAMES:
+        raise KeyError(f"unknown arch '{name}' (have {ARCH_NAMES})")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE
+
+
+def shape_skips(name: str) -> dict:
+    """shape_name -> reason, for cells this arch skips by assignment rule."""
+    return getattr(_module(name), "SHAPE_SKIPS", {})
+
+
+def runnable_shapes(name: str):
+    from repro.models.config import ALL_SHAPES
+    skips = shape_skips(name)
+    return tuple(s for s in ALL_SHAPES if s.name not in skips)

@@ -1,0 +1,20 @@
+"""command-r-35b [dense]: 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000 — GQA, no-bias. [hf:CohereForAI/c4ai-command-r-v01; unverified]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b", family="dense",
+    n_layers=40, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=22528, vocab_size=256000, rope_theta=8_000_000.0,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="command-r-35b-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=176, vocab_size=503, dtype="float32")
+
+SHAPE_SKIPS = {
+    "long_500k": "pure full attention (no sliding/SSM path): 500k-context "
+                 "decode excluded by assignment rule",
+}

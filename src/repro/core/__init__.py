@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution: posit arithmetic + the PDPU.
+
+Layers (each bit-exact against the one below, enforced by tests):
+  posit_py  : exact Fraction oracle (ground truth)
+  posit_np  : vectorized numpy int64 codec + PDPU emulation (benchmarks)
+  posit     : jittable JAX int32 codec (models/kernels building block)
+  pdpu      : fused 6-stage PDPU emulation in JAX
+  discrete  : the paper's baseline architectures (Fig. 1)
+  quant     : framework-level posit quantization policy
+  hwmodel   : configurable-generator cost model (Table I / Fig. 6)
+"""
+from .formats import (  # noqa: F401
+    PositFormat, PDPUConfig,
+    P16_2, P13_2, P10_2, P8_2, P8_1, P8_0,
+    PDPU_P16_16_N4_W14, PDPU_P13_16_N4_W14, PDPU_P13_16_N8_W14,
+    PDPU_P10_16_N8_W14, PDPU_P13_16_N8_W10, PDPU_QUIRE_P13_16_N4,
+)
+from .quant import QuantPolicy, policy_by_name  # noqa: F401
+from . import posit, pdpu, posit_np, posit_py, discrete, hwmodel, quant  # noqa: F401

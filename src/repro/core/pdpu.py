@@ -1,0 +1,157 @@
+"""PDPU — fused posit dot-product unit, bit-faithful JAX emulation.
+
+Implements the paper's 6-stage datapath (Fig. 4) as vectorized int32 JAX:
+
+  S1 Decode     : 2N+1 posit decoders (the *only* decodes — fused property)
+  S2 Multiply   : exact integer mantissa products + exponent comparator tree
+  S3 Align      : shift into the W_m-wide window at e_max, truncate, 2's-comp
+  S4 Accumulate : sum of N+1 aligned terms (== the recursive CSA tree result)
+  S5 Normalize  : leading-zero count -> final scale / significand
+  S6 Encode     : single posit rounding + pack (the *only* encode)
+
+Bit-exact against the independent Python staged model and, for wide W_m,
+against the exact quire oracle (see tests/test_pdpu.py).
+
+This module is the *reference semantics* of the hardware; the Pallas kernel
+`repro.kernels.pdpu_dot` runs the same datapath on TPU tiles, and the numpy
+twin (`posit_np.pdpu_dot_np`) drives the paper's accuracy benchmarks.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .formats import PDPUConfig, PositFormat
+from . import posit
+
+_I32 = jnp.int32
+# python int (not a jnp scalar) so Pallas kernels can close over this module
+_NEG_INF = -(1 << 24)
+
+
+def _validate(cfg: PDPUConfig):
+    fbi = cfg.fmt_in.frac_bits
+    if 2 * (fbi + 1) + 2 + cfg.guard_bits > 31:
+        raise ValueError("input mantissa product exceeds the int32 datapath")
+    hi_bits = cfg.w_m + cfg.guard_bits + math.ceil(math.log2(cfg.N + 1)) + 1
+    if hi_bits > 31:
+        raise ValueError(
+            f"w_m={cfg.w_m}, N={cfg.N} accumulator needs {hi_bits} bits > int32; "
+            "use posit_np.pdpu_dot_np (int64) or the quire oracle for wide w_m"
+        )
+
+
+def pdpu_dot(va_codes, vb_codes, acc_codes, cfg: PDPUConfig):
+    """out = round( acc + Va . Vb ) through the W_m-aligned fused datapath.
+
+    va_codes, vb_codes: int arrays [..., N] of cfg.fmt_in posit codes.
+    acc_codes:          int array  [...]    of cfg.fmt_out posit codes.
+    Returns cfg.fmt_out posit codes, int32 [...].
+    """
+    _validate(cfg)
+    fi, fo, w_m = cfg.fmt_in, cfg.fmt_out, cfg.w_m
+    va_codes = va_codes.astype(_I32)
+    vb_codes = vb_codes.astype(_I32)
+    acc_codes = acc_codes.astype(_I32)
+
+    # ---- S1: decode (sole decode stage) ----------------------------------
+    za, na, sa, ea, fa = posit.decode_unpacked(va_codes, fi)
+    zb, nb, sb, eb, fb_ = posit.decode_unpacked(vb_codes, fi)
+    zc, nc, sc, ec, fc = posit.decode_unpacked(acc_codes, fo)
+    any_nar = jnp.any(na | nb, axis=-1) | nc
+
+    fbi, fbo = fi.frac_bits, fo.frac_bits
+
+    # ---- S2: mantissa products (radix-4 Booth == exact int multiply) -----
+    prod = fa * fb_                      # [..., N]; 2*fbi frac bits, in [1,4)
+    s_ab = sa ^ sb
+    e_ab = jnp.where(za | zb, _NEG_INF, ea + eb)
+    e_c = jnp.where(zc, _NEG_INF, ec)
+    # comparator tree
+    e_max = jnp.maximum(jnp.max(e_ab, axis=-1), e_c)
+    all_zero = e_max == _NEG_INF
+    e_max_s = jnp.where(all_zero, 0, e_max)
+
+    # ---- S3: align into the w_m window (LSB weight 2**(e_max+2-w_m));
+    # guard_bits extra low bits are kept and shifted-out bits optionally
+    # OR into a sticky LSB (faithful-rounding plumbing; see PDPUConfig) ----
+    G = cfg.guard_bits
+    lsb_w = e_max_s + 2 - w_m
+
+    def _align(frac, e, fb, lsb):
+        sh = (e - fb) - lsb + G
+        sh = jnp.where(e == _NEG_INF, -31, sh)
+        sh = jnp.clip(sh, -31, 31)
+        left = frac << jnp.maximum(sh, 0)
+        right_sh = jnp.minimum(-sh, 31)
+        right = frac >> right_sh
+        out = jnp.where(sh >= 0, left, right)
+        if cfg.sticky:
+            dropped = jnp.where(sh < 0, frac & ((_I32(1) << right_sh) - 1), 0)
+            out = out | (dropped != 0).astype(_I32)
+        return out
+
+    t = _align(prod, e_ab, 2 * fbi, lsb_w[..., None])
+    t = jnp.where(s_ab == 1, -t, t)      # two's complement conversion
+    tc = _align(fc, e_c, fbo, lsb_w)
+    tc = jnp.where(sc == 1, -tc, tc)
+
+    # ---- S4: accumulate (int add == recursive CSA tree, bit-exact) -------
+    ssum = jnp.sum(t, axis=-1) + tc
+    f_s = (ssum < 0).astype(_I32)
+    sm = jnp.abs(ssum)
+
+    # ---- S5: normalize ----------------------------------------------------
+    p = posit.bit_length32(jnp.maximum(sm, 1)) - 1  # MSB index
+    f_scale = (e_max_s + 2 - w_m - G) + p
+
+    # ---- S6: single posit rounding + pack (sole encode stage) ------------
+    code = posit.encode_core(f_s, f_scale, sm, p, jnp.zeros(sm.shape, bool), fo)
+    code = jnp.where(all_zero | (sm == 0), 0, code)
+    code = jnp.where(any_nar, fo.nar_code, code)
+    return code.astype(_I32)
+
+
+def pdpu_chunked_dot(a_codes, b_codes, cfg: PDPUConfig, acc_codes=None):
+    """Long dot product by chunk-size-N PDPU accumulation (paper §III-C).
+
+    a_codes, b_codes: [..., K], K % N == 0.  The running accumulator lives
+    in fmt_out between chunks — exactly the hardware dataflow where one
+    PDPU instance processes a DNN dot product over K/N cycles.
+    """
+    K = a_codes.shape[-1]
+    N = cfg.N
+    if K % N != 0:
+        raise ValueError(f"dot length {K} not divisible by chunk size {N}")
+    steps = K // N
+    if acc_codes is None:
+        acc = jnp.zeros(a_codes.shape[:-1], dtype=_I32)
+    else:
+        acc = acc_codes.astype(_I32)
+
+    a_ch = jnp.moveaxis(a_codes.reshape(a_codes.shape[:-1] + (steps, N)), -2, 0)
+    b_ch = jnp.moveaxis(b_codes.reshape(b_codes.shape[:-1] + (steps, N)), -2, 0)
+
+    def body(acc, ab):
+        a, b = ab
+        return pdpu_dot(a, b, acc, cfg), None
+
+    acc, _ = jax.lax.scan(body, acc, (a_ch, b_ch))
+    return acc
+
+
+def pdpu_matmul_exact(a_codes, b_codes, cfg: PDPUConfig):
+    """[M,K] x [K,N_out] posit matmul through chunked PDPU accumulation.
+
+    Bit-faithful to an accelerator tiling its GEMM onto PDPU chunk units.
+    Emulation only — O(M*N_out*K) scalar dataflow; use the fused Pallas
+    kernel for production compute.
+    """
+    M, K = a_codes.shape
+    K2, N_out = b_codes.shape
+    assert K == K2
+    a_exp = jnp.broadcast_to(a_codes[:, None, :], (M, N_out, K))
+    b_exp = jnp.broadcast_to(b_codes.T[None, :, :], (M, N_out, K))
+    return pdpu_chunked_dot(a_exp, b_exp, cfg)

@@ -1,0 +1,85 @@
+"""Framework-level posit quantization policy.
+
+The paper positions PDPU as "the computing core of posit-based accelerators"
+with mixed precision as a first-class strategy (§III-B): low-precision posit
+inputs, higher-precision posit accumulator/output.  This module carries that
+policy through the model stack: every matmul in `repro.models` consults a
+`QuantPolicy` to decide which tensors are stored/computed in which posit
+format, and the distributed optimizer uses `grad_format` for posit-compressed
+gradient all-reduce.
+
+On TPU the decode of a P(n<=16,es) code into f32 is *exact* (see
+`core/posit.py`), so the MXU matmul over decoded posits with f32 accumulation
+realizes the paper's "fused: decode once, accumulate wide, encode once"
+semantics natively — the f32 accumulator plays the W_m-wide aligned
+accumulator, and the single encode of the output applies the one rounding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .formats import PositFormat, P16_2, P13_2, P8_2
+from . import posit
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Which tensors travel through which posit format (None = keep float).
+
+    weights     : storage/compute format of weight matrices.
+    activations : format applied to matmul activations (inputs).
+    kv_cache    : serving KV-cache storage format.
+    grad_allreduce : gradient compression format for cross-replica reduce.
+    accum_dtype : wide accumulation dtype — the W_m analogue on TPU.
+    """
+
+    weights: Optional[PositFormat] = None
+    activations: Optional[PositFormat] = None
+    kv_cache: Optional[PositFormat] = None
+    grad_allreduce: Optional[PositFormat] = None
+    accum_dtype: jnp.dtype = jnp.float32
+
+    @property
+    def enabled(self) -> bool:
+        return any(f is not None for f in (self.weights, self.activations, self.kv_cache))
+
+    def maybe_quant_weight(self, w):
+        if self.weights is None:
+            return w
+        return posit.quantize_ste(w, self.weights)
+
+    def maybe_quant_act(self, x):
+        if self.activations is None:
+            return x
+        return posit.quantize_ste(x, self.activations)
+
+    def maybe_quant_kv(self, kv):
+        if self.kv_cache is None:
+            return kv
+        return posit.quantize(kv, self.kv_cache)
+
+
+# The paper's headline mixed-precision configuration, P(13/16,2):
+# low-precision inputs, higher-precision accumulation.
+PAPER_MIXED = QuantPolicy(weights=P13_2, activations=P13_2)
+# Uniform P(16,2) (Table I row 3).
+UNIFORM_P16 = QuantPolicy(weights=P16_2, activations=P16_2)
+# Serving policy: posit weights + posit KV cache, float activations.
+SERVE_P16_KV8 = QuantPolicy(weights=P16_2, kv_cache=P8_2)
+# No quantization (baseline).
+NONE = QuantPolicy()
+
+
+def policy_by_name(name: str) -> QuantPolicy:
+    table = {
+        "none": NONE,
+        "paper_mixed": PAPER_MIXED,
+        "uniform_p16": UNIFORM_P16,
+        "serve_p16_kv8": SERVE_P16_KV8,
+    }
+    if name not in table:
+        raise KeyError(f"unknown quant policy '{name}' (have {sorted(table)})")
+    return table[name]

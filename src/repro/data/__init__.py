@@ -1,0 +1,2 @@
+"""Deterministic, resumable, host-sharded data pipeline."""
+from .pipeline import Pipeline, DataConfig  # noqa: F401

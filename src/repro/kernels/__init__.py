@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the posit/PDPU hot spots.
+
+  posit_codec  : elementwise decode/encode (S1/S6 on the VPU)
+  posit_matmul : fused posit GEMM — in-kernel decode, MXU f32 wide
+                 accumulate, single encode (the PDPU's TPU-native form)
+  pdpu_dot     : bit-exact chunked-PDPU GEMM (hardware-faithful W_m path)
+  ops          : public jit'd wrappers (auto-interpret off-TPU)
+  ref          : pure-jnp oracles for the allclose/bit-identity sweeps
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,56 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Central switch: on non-TPU backends every kernel runs in interpret mode
+(Pallas executes the kernel body with jnp on CPU), so the whole framework —
+models, tests, benchmarks — exercises the identical kernel code paths that
+compile to Mosaic on a real TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import PDPUConfig, PositFormat
+from . import posit_codec, posit_matmul, pdpu_dot
+from . import ref  # noqa: F401  (re-exported for tests/benchmarks)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decode(codes, fmt: PositFormat, **kw):
+    """posit codes -> f32 (Pallas elementwise kernel)."""
+    return posit_codec.decode(codes, fmt, interpret=_interpret(), **kw)
+
+
+def encode(values, fmt: PositFormat, **kw):
+    """float -> posit codes in storage dtype (Pallas elementwise kernel)."""
+    return posit_codec.encode(values, fmt, interpret=_interpret(), **kw)
+
+
+def fused_matmul(a_codes, b_codes, fmt_a: PositFormat, fmt_b: PositFormat,
+                 fmt_out: PositFormat | None = None, **kw):
+    """Fused posit GEMM: in-kernel decode -> MXU f32 -> single encode."""
+    return posit_matmul.posit_matmul(
+        a_codes, b_codes, fmt_a, fmt_b, fmt_out,
+        interpret=_interpret(), **kw)
+
+
+def pdpu_matmul(a_codes, b_codes, cfg: PDPUConfig, **kw):
+    """Bit-exact chunked-PDPU GEMM (hardware-faithful W_m datapath)."""
+    return pdpu_dot.pdpu_matmul(a_codes, b_codes, cfg,
+                                interpret=_interpret(), **kw)
+
+
+def matmul_posit_weights(x, w_codes, fmt_w: PositFormat, **kw):
+    """float activations x posit-stored weights — the serving fast path.
+
+    Encodes nothing: x is quantization-free, w decodes exactly in-kernel.
+    Returns f32.  (Used by the serving stack for posit-weight checkpoints.)
+    """
+    x_codes = None  # activations stay float: encode would add rounding
+    del x_codes
+    a = x.astype(jnp.float32)
+    w = posit_codec.decode(w_codes, fmt_w, interpret=_interpret())
+    return jnp.dot(a, w, preferred_element_type=jnp.float32)

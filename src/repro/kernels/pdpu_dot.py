@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: bit-exact chunked-PDPU GEMM (hardware-faithful path).
+
+Runs the paper's S1..S6 integer datapath — including the W_m alignment
+truncation and the fmt_out accumulator between chunks — over (bm, bn) output
+tiles.  Every output element is bit-identical to what a silicon PDPU array
+with chunk size N and alignment width W_m would produce.
+
+This is the *fidelity* kernel: it exists so a TPU deployment can (a) serve
+accuracy-critical layers with accelerator-exact semantics and (b) validate
+the fast fused kernel (`posit_matmul`) / study W_m sensitivity at speed.
+It is VPU-bound by design (integer select-chains, no MXU), so its roofline
+is the vector unit, not the matrix unit — see benchmarks/bench_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import pdpu as pdpu_core
+from repro.core.formats import PDPUConfig
+
+_BM, _BN = 64, 128
+
+
+def _pdpu_gemm_kernel(a_ref, b_ref, out_ref, *, cfg: PDPUConfig, n_chunks: int):
+    a = a_ref[...].astype(jnp.int32) & cfg.fmt_in.mask  # [bm, K]
+    b = b_ref[...].astype(jnp.int32) & cfg.fmt_in.mask  # [K, bn]
+    bm, K = a.shape
+    _, bn = b.shape
+    N = cfg.N
+
+    def body(j, acc):
+        a_ch = jax.lax.dynamic_slice(a, (0, j * N), (bm, N))  # [bm, N]
+        b_ch = jax.lax.dynamic_slice(b, (j * N, 0), (N, bn))  # [N, bn]
+        va = jnp.broadcast_to(a_ch[:, None, :], (bm, bn, N))
+        vb = jnp.broadcast_to(jnp.transpose(b_ch)[None, :, :], (bm, bn, N))
+        return pdpu_core.pdpu_dot(va, vb, acc, cfg)
+
+    acc0 = jnp.zeros((bm, bn), jnp.int32)
+    out_ref[...] = jax.lax.fori_loop(0, n_chunks, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bm", "bn", "interpret"))
+def pdpu_matmul(a_codes, b_codes, cfg: PDPUConfig, bm=_BM, bn=_BN,
+                interpret=False):
+    """[M,K] x [K,N] posit-code GEMM through chunk-size-N PDPUs.
+
+    K must be divisible by cfg.N (hardware constraint: whole chunks).
+    M/N are padded to tile multiples (code 0 == posit zero, exact).
+    Output: int32 posit codes in cfg.fmt_out.
+    """
+    M, K = a_codes.shape
+    K2, N_out = b_codes.shape
+    if K != K2:
+        raise ValueError("contraction mismatch")
+    if K % cfg.N:
+        raise ValueError(f"K={K} not divisible by PDPU chunk size N={cfg.N}")
+    bm_, bn_ = min(bm, M), min(bn, N_out)
+
+    def pad(x, m0, m1):
+        p0, p1 = (-x.shape[0]) % m0, (-x.shape[1]) % m1
+        return jnp.pad(x, ((0, p0), (0, p1))) if (p0 or p1) else x
+
+    a_p = pad(a_codes, bm_, 1)
+    b_p = pad(b_codes, 1, bn_)
+    Mp, Np = a_p.shape[0], b_p.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_pdpu_gemm_kernel, cfg=cfg, n_chunks=K // cfg.N),
+        grid=(Mp // bm_, Np // bn_),
+        in_specs=[
+            pl.BlockSpec((bm_, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:M, :N_out]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert bit-identity (codec,
+pdpu_dot) or allclose (fused matmul) against these references.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core import pdpu as pdpu_core
+from repro.core.formats import PDPUConfig, PositFormat
+
+
+def decode_ref(codes, fmt: PositFormat, dtype=jnp.float32):
+    """posit codes -> float values."""
+    return posit.decode(codes.astype(jnp.int32) & fmt.mask, fmt, dtype=dtype)
+
+
+def encode_ref(values, fmt: PositFormat):
+    """float values -> posit codes in the storage container dtype."""
+    return posit.pack(values, fmt)
+
+
+def posit_matmul_ref(a_codes, b_codes, fmt_a: PositFormat, fmt_b: PositFormat,
+                     fmt_out: PositFormat | None = None, bk: int | None = None):
+    """Fused posit matmul semantics: decode once (exact), accumulate wide
+    (f32), encode once.  out = encode(decode(A) @ decode(B)) — exactly one
+    rounding per output element, the paper's fused property.
+
+    ``bk`` replays the kernel's K-block accumulation order so comparisons
+    are bit-identical (f32 addition is order-sensitive)."""
+    a = decode_ref(a_codes, fmt_a)
+    b = decode_ref(b_codes, fmt_b)
+    if bk is None or bk >= a.shape[-1]:
+        out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    else:
+        K = a.shape[-1]
+        out = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+        for k0 in range(0, K, bk):
+            out = out + jnp.dot(a[:, k0:k0 + bk], b[k0:k0 + bk, :],
+                                preferred_element_type=jnp.float32)
+    if fmt_out is None:
+        return out
+    return posit.pack(out, fmt_out)
+
+
+def pdpu_matmul_ref(a_codes, b_codes, cfg: PDPUConfig):
+    """Bit-exact chunked-PDPU GEMM (hardware-faithful W_m datapath)."""
+    return pdpu_core.pdpu_matmul_exact(
+        a_codes.astype(jnp.int32) & cfg.fmt_in.mask,
+        b_codes.astype(jnp.int32) & cfg.fmt_in.mask,
+        cfg,
+    )

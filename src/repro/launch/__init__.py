@@ -1,0 +1,1 @@
+"""Launch: production mesh, multi-pod dry-run, train/serve entry points."""

@@ -1,0 +1,228 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's `compiled.cost_analysis()` counts every computation ONCE — a
+lax.scan over 64 layers reports 1/64th of the real FLOPs, and collectives
+inside the scanned layer body (the dominant FSDP all-gathers!) are equally
+undercounted.  This module parses the optimized (post-SPMD, per-device) HLO
+text, builds the computation call graph, multiplies while-loop bodies by
+their `known_trip_count`, and accumulates:
+
+  * flops            : 2 * prod(out_dims) * contracted_size per dot op
+  * collective bytes : output bytes of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute
+  * hbm bytes        : operand+output bytes of top-level (fusion-level) ops
+                       — a standard post-fusion traffic proxy
+
+All numbers are per-device (the compiled module is the per-device program).
+Verified against hand-counted models in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+                "u64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+                "s4": 1, "u4": 1, "token": 0, "opaque": 0}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?))\s+([\w\-]+)\((.*)$")
+_CALLED = re.compile(
+    r"(?:body|condition|to_apply|calls|called_computations)=\{?%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'known_trip_count[\\\":{ ]+n[\\\": ]+(\d+)')
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        b = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.ops = []          # (name, shape_str, opcode, rest_of_line)
+        self.shapes = {}       # op name -> shape str
+        self.calls = []        # (child_name, multiplier)
+        self.is_fusion_target = False
+
+
+def parse_hlo(text: str):
+    comps = {}
+    cur = None
+    for line in text.splitlines():
+        header = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if header:
+            cur = Computation(header.group(1))
+            cur.is_entry = line.startswith("ENTRY")
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, rest = m.groups()
+        cur.ops.append((name, shape, opcode, rest))
+        cur.shapes[name] = shape
+        if opcode in ("while",):
+            body = None
+            trip = 1
+            for cm in _CALLED.finditer(rest):
+                pass
+            bm = re.search(r"body=%?([\w.\-]+)", rest)
+            tm = _TRIP.search(rest)
+            if tm:
+                trip = int(tm.group(1))
+            if bm:
+                cur.calls.append((bm.group(1), trip))
+            cm = re.search(r"condition=%?([\w.\-]+)", rest)
+            if cm:
+                cur.calls.append((cm.group(1), trip + 1))
+        elif opcode == "conditional":
+            for br in _BRANCHES.findall(rest):
+                for b in re.findall(r"%?([\w.\-]+)", br):
+                    cur.calls.append((b, 1))
+        else:
+            for cm in _CALLED.finditer(rest):
+                cur.calls.append((cm.group(1), 1))
+            if opcode == "fusion":
+                km = re.search(r"calls=%?([\w.\-]+)", rest)
+                if km:
+                    pass  # already added via _CALLED
+    return comps
+
+
+def _multiplicities(comps):
+    entry = None
+    for c in comps.values():
+        if getattr(c, "is_entry", False):
+            entry = c.name
+    mult = defaultdict(float)
+    if entry is None:
+        return mult
+    # iterate to fixpoint over the DAG (call graph is acyclic in HLO)
+    mult[entry] = 1.0
+    order = list(comps)
+    for _ in range(len(order)):
+        changed = False
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for name, c in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0:
+                continue
+            for child, k in c.calls:
+                if child in comps:
+                    new[child] += m * k
+        for k, v in new.items():
+            if abs(mult.get(k, 0.0) - v) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return mult
+
+
+def _mark_fusion_targets(comps):
+    for c in comps.values():
+        for _, shape, opcode, rest in c.ops:
+            if opcode == "fusion":
+                km = re.search(r"calls=%?([\w.\-]+)", rest)
+                if km and km.group(1) in comps:
+                    _mark_rec(comps, km.group(1))
+
+
+def _mark_rec(comps, name):
+    c = comps[name]
+    if c.is_fusion_target:
+        return
+    c.is_fusion_target = True
+    for child, _ in c.calls:
+        if child in comps:
+            _mark_rec(comps, child)
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = parse_hlo(text)
+    mult = _multiplicities(comps)
+    _mark_fusion_targets(comps)
+
+    flops = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_count = {k: 0 for k in _COLLECTIVES}
+    hbm = 0.0
+
+    for cname, c in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        for name, shape, opcode, rest in c.ops:
+            if opcode == "dot":
+                out_elems = 1
+                for d in _shape_dims(shape):
+                    out_elems *= d
+                # contracted size from lhs shape + contracting dims
+                ops_m = _OPERANDS.findall(rest)
+                lhs = ops_m[0] if ops_m else None
+                cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+                csize = 1
+                if lhs and lhs in c.shapes and cd:
+                    ldims = _shape_dims(c.shapes[lhs])
+                    for i in (int(x) for x in cd.group(1).split(",") if x):
+                        if i < len(ldims):
+                            csize *= ldims[i]
+                flops += m * 2.0 * out_elems * csize
+            elif opcode == "convolution":
+                # rough: 2 * out_elems * kernel_elems (enough for stubs)
+                out_elems = 1
+                for d in _shape_dims(shape):
+                    out_elems *= d
+                flops += m * 2.0 * out_elems
+            elif opcode in _COLLECTIVES:
+                b = _shape_bytes(shape)
+                coll[opcode] += m * b
+                coll_count[opcode] += int(m)
+            # HBM traffic at fusion granularity: top-level ops only
+            if not c.is_fusion_target and opcode not in (
+                    "parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast", "while", "conditional"):
+                b = _shape_bytes(shape)
+                for opnd in _OPERANDS.findall(rest):
+                    if opnd in c.shapes:
+                        b += _shape_bytes(c.shapes[opnd])
+                hbm += m * b
+
+    return {
+        "flops": flops,
+        "collective_bytes": sum(coll.values()),
+        "collective_per_op": coll,
+        "collective_counts": coll_count,
+        "hbm_bytes": hbm,
+    }

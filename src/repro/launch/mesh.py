@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before first
+device init, and tests must see a 1-device world.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod ('data' x 'model'); 2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small explicit mesh for tests on host platform devices."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+HW = {
+    # TPU v5e-class target constants for the roofline (per chip)
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link (~per-chip usable)
+    "hbm_bytes": 16 * 2**30,
+}

@@ -1,0 +1,98 @@
+"""Unified model API — dispatch by config family.
+
+Every architecture exposes the same five entry points:
+    param_specs(cfg)                      -> pytree[ParamSpec]
+    init(rng, cfg)                        -> params
+    apply(params, batch, cfg)             -> logits          (train/encode)
+    prefill(params, batch, cfg, max_seq)  -> (logits, cache) (serving)
+    decode_step(params, tokens, cache, cfg) -> (logits, cache')
+plus `input_specs(cfg, shape)` producing allocation-free ShapeDtypeStructs
+for the dry-run, and `cache_specs` for decode-state dry-runs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer, moe, mamba, hybrid
+from .config import ModelConfig, ShapeConfig
+from .module import ParamSpec, abstract_params, init_params
+
+
+def _mod(cfg: ModelConfig):
+    return {
+        "dense": transformer,
+        "encoder": transformer,
+        "vlm": transformer,
+        "moe": moe,
+        "ssm": mamba,
+        "hybrid": hybrid,
+    }[cfg.family]
+
+
+def param_specs(cfg: ModelConfig):
+    return _mod(cfg).param_specs(cfg)
+
+
+def init(rng, cfg: ModelConfig):
+    return init_params(rng, param_specs(cfg))
+
+
+def apply(params, batch, cfg: ModelConfig, **kw):
+    return _mod(cfg).apply(params, batch, cfg, **kw)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: Optional[int] = None):
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no autoregressive serving")
+    return _mod(cfg).prefill(params, batch, cfg, max_seq=max_seq)
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    return _mod(cfg).decode_step(params, tokens, cache, cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    return _mod(cfg).cache_specs(cfg, batch, max_seq)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return _mod(cfg).init_cache(cfg, batch, max_seq)
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, never allocated)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels=True):
+    """Model inputs for one assigned shape cell.
+
+    train/prefill: full [B, S] token batch (plus stub-frontend embeddings
+    for audio/vlm, which replace/augment part of the sequence).
+    decode: one token per row; the KV/SSM cache comes from cache_specs.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    batch = {}
+    if shape.kind == "decode":
+        batch["tokens"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        return batch
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), jnp.float32)
+    elif cfg.frontend == "vision_stub":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.frontend_tokens), jnp.int32)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if with_labels and shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch
+
+
+def abstract_state(cfg: ModelConfig):
+    return abstract_params(param_specs(cfg))

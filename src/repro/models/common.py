@@ -1,0 +1,245 @@
+"""Shared transformer building blocks (pure JAX, posit-quant aware).
+
+Every matmul routes through `qdot`, which applies the configured posit
+QuantPolicy (paper §III-B mixed precision: low-precision posit operands,
+wide f32 accumulation — the PDPU contract) and accumulates in f32.
+
+Attention is a flash-style streaming softmax over KV chunks (lax.scan), so
+prefill_32k never materializes an S x S score matrix; sliding-window layers
+restrict work to the diagonal band.  KV caches may be stored as posit codes
+(int8/int16) per the QuantPolicy — decoded exactly on read.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.quant import QuantPolicy
+from repro.parallel import sharding
+from .config import ModelConfig
+
+_NEG = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def qdot(x, w, policy: QuantPolicy, prec_dtype=jnp.float32):
+    """Posit-quantized matmul with wide accumulation (PDPU semantics).
+
+    x: [..., K] activations; w: [K, ...] weights.  Both sides are
+    fake-quantized through their posit formats (STE for training); the
+    contraction accumulates in f32 — the fused wide-accumulator property.
+
+    prec_dtype is the *HLO output dtype* of the dot: on TPU the MXU always
+    accumulates f32 internally, but when the contraction dim is TP-sharded
+    the dot output dtype is what the partial-sum all-reduce ships.  Models
+    pass the compute dtype here when cfg.tp_bf16_reduce is on.
+    """
+    xq = policy.maybe_quant_act(x)
+    wq = policy.maybe_quant_weight(w.astype(x.dtype))
+    return jnp.dot(xq, wq, preferred_element_type=prec_dtype).astype(x.dtype)
+
+
+def tp_prec(cfg) -> jnp.dtype:
+    """Output dtype for TP-contracted projections (see qdot)."""
+    return cfg.compute_dtype if cfg.tp_bf16_reduce else jnp.float32
+
+
+def wgather(cfg, w, tp_axes):
+    """Weight-gather FSDP: re-constrain a weight to TP-only sharding right
+    before its matmul, so the FSDP shard is all-gathered (in the compute
+    dtype) rather than resolved by partial-summing activation-sized f32
+    tensors across the data axis (cfg.fsdp_gather_weights)."""
+    if not cfg.fsdp_gather_weights:
+        return w
+    return sharding.constrain(w, tp_axes)
+
+
+def rms_norm(x, scale, eps=1e-6, upcast=True):
+    """RMSNorm. The variance reduction is always f32; with upcast=False the
+    full-tensor normalize runs in x.dtype — no f32 activation tensor is
+    materialized, so SPMD all-reduces of the producing dot stay bf16
+    (used when ModelConfig.tp_bf16_reduce is on)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    if upcast:
+        out = x.astype(jnp.float32) * inv
+        return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+    out = x * inv.astype(x.dtype)
+    return out * (1.0 + scale).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embeddings. x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    ang = ang[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
+                    window: Optional[int], chunk_k: int = 1024,
+                    softcap_val: float = 0.0):
+    """Streaming-softmax attention over KV chunks (never S x S resident).
+
+    q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D]; GQA via Hq = G * Hkv.
+    q_pos: [B, Sq], kv_pos: [B, Skv] absolute positions for masking.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32) * scale
+
+    ck = min(chunk_k, Skv)
+    n_chunks = -(-Skv // ck)
+    pad = n_chunks * ck - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kc = k.reshape(B, n_chunks, ck, Hkv, D)
+    vc = v.reshape(B, n_chunks, ck, Hkv, D)
+    pc = kv_pos.reshape(B, n_chunks, ck)
+
+    def step(carry, blk):
+        m, l, o = carry
+        kb, vb, pb = blk  # [B, ck, Hkv, D], [B, ck]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32))
+        s = softcap(s, softcap_val)
+        mask = pb[:, None, None, None, :] >= 0
+        if causal:
+            mask &= q_pos[:, None, None, :, None] >= pb[:, None, None, None, :]
+        if window is not None:
+            mask &= (q_pos[:, None, None, :, None] - pb[:, None, None, None, :]) < window
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        o_new = o * corr[..., None] + pv
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        step, (m0, l0, o0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(pc, 1, 0)))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(o, 3, 1).reshape(B, Sq, Hq, D)  # [B,Sq,Hkv,G,D]->merge
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, kv_pos, *,
+                     window: Optional[int], softcap_val: float = 0.0):
+    """Single-token attention over a (possibly posit-coded) KV cache.
+
+    q: [B, 1, Hq, D]; k_cache/v_cache: [B, S, Hkv, D] floats (already
+    decoded by the caller if stored as posit); cache_len: [B] valid length.
+
+    The cache's sequence dim is sharded over the 'model' axis (kv_seq); the
+    score/softmax path is constrained to keep that sharding so each shard
+    attends over its local cache slice (flash-decode style: XLA emits the
+    tiny max/sum partial reductions instead of all-gathering the cache).
+    """
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    k_cache = sharding.constrain(k_cache, ("batch", "kv_seq", None, None))
+    v_cache = sharding.constrain(v_cache, ("batch", "kv_seq", None, None))
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    s = softcap(s, softcap_val)
+    s = sharding.constrain(s, ("batch", None, None, "kv_seq"))
+    q_pos = cache_len[:, None]  # this token's position == #valid entries
+    mask = kv_pos < q_pos  # [B, S]
+    if window is not None:
+        mask &= (q_pos - kv_pos) <= window
+    s = jnp.where(mask[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = sharding.constrain(p, ("batch", None, None, "kv_seq"))
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache with optional posit storage (QuantPolicy.kv_cache)
+# ---------------------------------------------------------------------------
+
+def kv_store_dtype(cfg: ModelConfig):
+    fmt = cfg.quant.kv_cache
+    if fmt is None:
+        return cfg.compute_dtype
+    return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[fmt.storage_bits]
+
+
+def kv_encode(cfg: ModelConfig, x):
+    fmt = cfg.quant.kv_cache
+    if fmt is None:
+        return x.astype(cfg.compute_dtype)
+    return posit.pack(x, fmt)
+
+
+def kv_decode(cfg: ModelConfig, x):
+    fmt = cfg.quant.kv_cache
+    if fmt is None:
+        return x
+    return posit.unpack(x, fmt, dtype=cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head / losses
+# ---------------------------------------------------------------------------
+
+def embed_tokens(emb, tokens, cfg: ModelConfig):
+    x = jnp.take(emb, tokens, axis=0).astype(cfg.compute_dtype)
+    return sharding.constrain(x, ("batch", None, "embed_act"))
+
+
+def logits_head(x, emb_or_head, cfg: ModelConfig, transpose: bool):
+    w = emb_or_head.astype(cfg.compute_dtype)
+    if transpose:  # tied embedding [V, D] -> project with its transpose
+        out = jnp.einsum("bsd,vd->bsv", x, cfg.quant.maybe_quant_weight(w),
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, cfg.quant.maybe_quant_weight(w),
+                         preferred_element_type=jnp.float32)
+    out = softcap(out, cfg.logit_softcap)
+    return sharding.constrain(out, ("batch", None, "vocab"))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Stable CE over a (possibly vocab-sharded) logits tensor. f32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

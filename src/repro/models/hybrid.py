@@ -1,0 +1,253 @@
+"""Jamba-style hybrid — jamba-1.5-large-398b: Mamba+attention 1:7
+interleave, MoE (16e top-2) every other layer.
+
+Layer pattern per period-8 block (attn_interval=8, moe_interval=2):
+    j == 0     : attention sub-layer
+    j in 1..7  : mamba2 sub-layer
+    j even     : dense FFN      j odd : MoE FFN
+
+Parameters are stacked per *block* (homogeneous), scanned over blocks, with
+the 8 sub-layers statically unrolled inside — compile time O(1) in depth
+while keeping three different sub-layer parameter shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding
+from . import common, transformer, moe as moe_m, mamba as mamba_m
+from .config import ModelConfig
+from .module import ParamSpec
+
+
+def _period(cfg: ModelConfig) -> int:
+    return cfg.attn_interval
+
+
+def _n_blocks(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % _period(cfg) == 0
+    return cfg.n_layers // _period(cfg)
+
+
+def _ffn_split(cfg: ModelConfig):
+    per = _period(cfg)
+    moe_js = [j for j in range(per) if j % cfg.moe_interval == cfg.moe_interval - 1]
+    dense_js = [j for j in range(per) if j not in moe_js]
+    return dense_js, moe_js
+
+
+def param_specs(cfg: ModelConfig):
+    D, V = cfg.d_model, cfg.vocab_size
+    nb, per = _n_blocks(cfg), _period(cfg)
+    Hq, Hkv, Dh, F = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
+    E, Fe = cfg.n_experts, cfg.moe_d_ff
+    dense_js, moe_js = _ffn_split(cfg)
+
+    attn = {
+        "ln1": ParamSpec((nb, D), ("stack", None), "zeros"),
+        "wq": ParamSpec((nb, D, Hq * Dh), ("stack", "embed", "heads"), "fan_in"),
+        "wk": ParamSpec((nb, D, Hkv * Dh), ("stack", "embed", "heads"), "fan_in"),
+        "wv": ParamSpec((nb, D, Hkv * Dh), ("stack", "embed", "heads"), "fan_in"),
+        "wo": ParamSpec((nb, Hq * Dh, D), ("stack", "heads", "embed"), "fan_in"),
+    }
+    mamba_specs = {
+        k: ParamSpec((nb, per - 1) + s.shape[1:], ("stack", None) + s.logical_axes[1:],
+                     s.init, s.dtype)
+        for k, s in mamba_m.layer_param_specs(cfg, 1).items()
+    }
+    ffn = {
+        "ln2": ParamSpec((nb, len(dense_js), D), ("stack", None, None), "zeros"),
+        "wi_gate": ParamSpec((nb, len(dense_js), D, F), ("stack", None, "embed", "mlp"), "fan_in"),
+        "wi_up": ParamSpec((nb, len(dense_js), D, F), ("stack", None, "embed", "mlp"), "fan_in"),
+        "wo_mlp": ParamSpec((nb, len(dense_js), F, D), ("stack", None, "mlp", "embed"), "fan_in"),
+    }
+    moe = {
+        "ln2": ParamSpec((nb, len(moe_js), D), ("stack", None, None), "zeros"),
+        "router": ParamSpec((nb, len(moe_js), D, E), ("stack", None, "embed", "experts"), "fan_in"),
+        "we_gate": ParamSpec((nb, len(moe_js), E, D, Fe), ("stack", None, "experts", "embed", "expert_mlp"), "fan_in"),
+        "we_up": ParamSpec((nb, len(moe_js), E, D, Fe), ("stack", None, "experts", "embed", "expert_mlp"), "fan_in"),
+        "we_down": ParamSpec((nb, len(moe_js), E, Fe, D), ("stack", None, "experts", "expert_mlp", "embed"), "fan_in"),
+    }
+    return {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), "embed"),
+        "blocks": {"attn": attn, "mamba": mamba_specs, "ffn": ffn, "moe": moe},
+        "final_norm": ParamSpec((D,), (None,), "zeros"),
+    }
+
+
+def _sub(tree, idx):
+    return jax.tree.map(lambda t: t[idx], tree)
+
+
+def _ffn_apply(blk, j, x, cfg: ModelConfig):
+    dense_js, moe_js = _ffn_split(cfg)
+    if j in moe_js:
+        p = _sub(blk["moe"], moe_js.index(j))
+        h = common.rms_norm(x, p["ln2"])
+        y, aux = moe_m.moe_ffn(p, h, cfg)
+        return x + y, aux
+    p = _sub(blk["ffn"], dense_js.index(j))
+    return x + transformer._mlp_block(p, x, cfg), jnp.float32(0)
+
+
+def apply(params, batch, cfg: ModelConfig, collect_cache: bool = False,
+          with_aux: bool = False):
+    x = common.embed_tokens(params["embed"], batch["tokens"], cfg)
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    per = _period(cfg)
+
+    def body(carry, blk):
+        x = carry
+        auxes = []
+        kv = None
+        for j in range(per):
+            if j == 0:
+                attn, k, v = transformer._attn_block(
+                    blk["attn"], x, cfg, pos, pos, jnp.bool_(True))
+                x = x + attn
+                kv = (k, v)
+            else:
+                p = _sub(blk["mamba"], j - 1)
+                out, _, _ = mamba_m.mamba_block(p, x, cfg)
+                x = x + out
+            x, aux = _ffn_apply(blk, j, x, cfg)
+            auxes.append(aux)
+            x = sharding.constrain(x, ("batch", None, "embed_act"))
+        return x, (jnp.stack(auxes).mean(), kv if collect_cache else None)
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat == "layer" else body
+    x, (auxes, kvs) = jax.lax.scan(body_fn, x, params["blocks"])
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    outs = [logits]
+    if collect_cache:
+        outs.append(kvs)
+    if with_aux:
+        outs.append(jnp.mean(auxes))
+    return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    nb, per = _n_blocks(cfg), _period(cfg)
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.ssm_d_inner + 2 * N
+    dt = common.kv_store_dtype(cfg)
+    kv_shape = (nb, batch, max_seq, cfg.n_kv_heads * cfg.head_dim)
+    return {
+        "k": ParamSpec(kv_shape, ("stack", "batch", "kv_seq", "kv_heads"), "zeros", dt),
+        "v": ParamSpec(kv_shape, ("stack", "batch", "kv_seq", "kv_heads"), "zeros", dt),
+        "ssm": ParamSpec((nb, per - 1, batch, H, P, N),
+                         ("stack", None, "batch", "ssm_heads", None, None), "zeros"),
+        "conv": ParamSpec((nb, per - 1, batch, cfg.ssm_conv - 1, conv_ch),
+                          ("stack", None, "batch", None, "ssm_heads"), "zeros", jnp.float32),
+        "length": ParamSpec((batch,), ("batch",), "zeros", jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq),
+                        is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq=None):
+    """Prefill: run blocks collecting KV + final SSM/conv states."""
+    x = common.embed_tokens(params["embed"], batch["tokens"], cfg)
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    per = _period(cfg)
+    max_seq = max_seq or S
+
+    def body(carry, blk):
+        x = carry
+        convs, ssms = [], []
+        kv = None
+        for j in range(per):
+            if j == 0:
+                attn, k, v = transformer._attn_block(
+                    blk["attn"], x, cfg, pos, pos, jnp.bool_(True))
+                x = x + attn
+                kv = (k, v)
+            else:
+                p = _sub(blk["mamba"], j - 1)
+                out, cs, ss = mamba_m.mamba_block(p, x, cfg)
+                x = x + out
+                convs.append(cs)
+                ssms.append(ss)
+            x, _ = _ffn_apply(blk, j, x, cfg)
+        return x, (kv, jnp.stack(convs), jnp.stack(ssms))
+
+    x, (kvs, convs, ssms) = jax.lax.scan(body, x, params["blocks"])
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    nb = _n_blocks(cfg)
+    fold = lambda t: common.kv_encode(cfg, t.reshape(nb, B, S, -1))
+    k_cache, v_cache = fold(kvs[0]), fold(kvs[1])
+    if max_seq > S:
+        pad = ((0, 0), (0, 0), (0, max_seq - S), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    cache = {"k": k_cache, "v": v_cache, "ssm": ssms,
+             "conv": convs.astype(jnp.float32),
+             "length": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    B = tokens.shape[0]
+    x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
+    S_max = cache["k"].shape[2]
+    length = cache["length"]
+    q_pos = length[:, None]
+    kv_pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32)[None], (B, S_max))
+    per = _period(cfg)
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+
+    def body(x, xs):
+        blk, k_l, v_l, conv_l, ssm_l = xs
+        convs, ssms = [], []
+        k_new = v_new = None
+        for j in range(per):
+            if j == 0:
+                p = blk["attn"]
+                h = common.rms_norm(x, p["ln1"])
+                q = common.qdot(h, p["wq"], cfg.quant).reshape(B, 1, cfg.n_heads, Dh)
+                k = common.qdot(h, p["wk"], cfg.quant).reshape(B, 1, Hkv, Dh)
+                v = common.qdot(h, p["wv"], cfg.quant).reshape(B, 1, Hkv, Dh)
+                q = common.rope(q, q_pos, cfg.rope_theta)
+                k = common.rope(k, q_pos, cfg.rope_theta)
+                k_new = transformer._cache_insert(
+                    k_l, common.kv_encode(cfg, k.reshape(B, 1, -1)), length)
+                v_new = transformer._cache_insert(
+                    v_l, common.kv_encode(cfg, v.reshape(B, 1, -1)), length)
+                kc = common.kv_decode(cfg, k_new).reshape(B, S_max, Hkv, Dh)
+                vc = common.kv_decode(cfg, v_new).reshape(B, S_max, Hkv, Dh)
+                attn = common.decode_attention(q, kc, vc, length + 1, kv_pos,
+                                               window=None)
+                x = x + common.qdot(attn.reshape(B, 1, cfg.n_heads * Dh),
+                                    p["wo"], cfg.quant)
+            else:
+                p = _sub(blk["mamba"], j - 1)
+                out, cs, ss = mamba_m.mamba_block(
+                    p, x, cfg, conv_state=conv_l[j - 1],
+                    ssm_state=ssm_l[j - 1], single_step=True)
+                x = x + out
+                convs.append(cs)
+                ssms.append(ss)
+            x, _ = _ffn_apply(blk, j, x, cfg)
+        return x, (k_new, v_new, jnp.stack(convs), jnp.stack(ssms))
+
+    x, (k_c, v_c, convs, ssms) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"],
+                  cache["conv"], cache["ssm"]))
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    return logits[:, 0], {"k": k_c, "v": v_c, "ssm": ssms, "conv": convs,
+                          "length": length + 1}

@@ -1,0 +1,264 @@
+"""Mamba2 (SSD — state-space duality) — mamba2-1.3b, and the Mamba sub-layers
+of jamba-1.5-large.
+
+Training/prefill runs the chunked SSD matmul form (MXU-friendly: intra-chunk
+attention-like matmuls + an inter-chunk state scan).  Decode carries an O(1)
+recurrent state per layer — this is why the 500k-context cell is assigned to
+the SSM/hybrid families.
+
+Per the paper's mixed-precision principle (DESIGN.md §Arch-applicability):
+posit quantization applies to the in/out projections (dot products); the
+recurrent state and the SSD scan stay f32 — a long dependent accumulation is
+exactly the repeated-rounding failure mode PDPU's fused design eliminates,
+so we keep the accumulator wide, as the paper keeps `acc` in fmt_out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding
+from . import common
+from .config import ModelConfig
+from .module import ParamSpec
+
+_G = 1  # B/C groups (mamba2 default ngroups=1)
+
+
+def layer_param_specs(cfg: ModelConfig, L: int, prefix_axis="layers"):
+    D = cfg.d_model
+    Di = cfg.ssm_d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_ch = Di + 2 * _G * N
+    proj_out = 2 * Di + 2 * _G * N + H
+    return {
+        "ln": ParamSpec((L, D), (prefix_axis, None), "zeros"),
+        "in_proj": ParamSpec((L, D, proj_out), (prefix_axis, "embed", "ssm_heads"), "fan_in"),
+        "conv_w": ParamSpec((L, cfg.ssm_conv, conv_ch), (prefix_axis, None, "ssm_heads"), "fan_in"),
+        "conv_b": ParamSpec((L, conv_ch), (prefix_axis, "ssm_heads"), "zeros"),
+        "A_log": ParamSpec((L, H), (prefix_axis, None), "arange1"),
+        "D_skip": ParamSpec((L, H), (prefix_axis, None), "ones"),
+        "dt_bias": ParamSpec((L, H), (prefix_axis, None), "zeros"),
+        "norm": ParamSpec((L, Di), (prefix_axis, "ssm_heads"), "zeros"),
+        "out_proj": ParamSpec((L, Di, D), (prefix_axis, "ssm_heads", "embed"), "fan_in"),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    D, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    return {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), "embed"),
+        "layers": layer_param_specs(cfg, L),
+        "final_norm": ParamSpec((D,), (None,), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core SSD math
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    Di, N = cfg.ssm_d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    z = zxbcdt[..., :Di]
+    xs = zxbcdt[..., Di:2 * Di]
+    B_ = zxbcdt[..., 2 * Di:2 * Di + _G * N]
+    C_ = zxbcdt[..., 2 * Di + _G * N:2 * Di + 2 * _G * N]
+    dt = zxbcdt[..., 2 * Di + 2 * _G * N:]
+    return z, xs, B_, C_, dt
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv, taps K = w.shape[0]. xBC: [B, S, C].
+
+    state: [B, K-1, C] trailing context (decode); returns (out, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)  # [B, S+K-1, C]
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    out = jax.nn.silu((out + b).astype(jnp.float32)).astype(xBC.dtype)
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out, new_state
+
+
+def ssd_forward(cfg: ModelConfig, xs, B_, C_, dt, A_log, dt_bias,
+                init_state=None):
+    """Chunked SSD. xs: [B,S,Di]; B_/C_: [B,S,G*N]; dt: [B,S,H].
+
+    Returns (y [B,S,Di], final_state [B,H,P,N]). f32 internal.
+    """
+    Bb, S, Di = xs.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by ssd chunk {Q}"
+    nc = S // Q
+    x = xs.reshape(Bb, nc, Q, H, P).astype(jnp.float32)
+    Bm = B_.reshape(Bb, nc, Q, _G, N).astype(jnp.float32)
+    Cm = C_.reshape(Bb, nc, Q, _G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)  # [B,S,H]
+    dt = dt.reshape(Bb, nc, Q, H)
+    A = -jnp.exp(A_log.astype(jnp.float32))  # [H], negative
+    dA = dt * A  # [B,nc,Q,H]
+    cums = jnp.cumsum(dA, axis=2)  # inclusive cumulative decay within chunk
+
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    idx = jnp.arange(Q)
+    tri = idx[:, None] >= idx[None, :]  # [Q, Q] causal within chunk
+
+    def chunk_step(state, blk):
+        xq, Bq, Cq, dtq, cq, dAq = blk
+        # xq [B,Q,H,P]; Bq/Cq [B,Q,G,N]; dtq/cq [B,Q,H]
+        # ---- intra-chunk (attention-like) ----
+        CB = jnp.einsum("bqgn,bkgn->bqk", Cq, Bq)  # G=1
+        # clamp the masked (i<j) entries BEFORE exp: exp(+large) would be a
+        # finite-forward/NaN-backward through the where (0 * inf in the vjp)
+        dlt = jnp.minimum(cq[:, :, None, :] - cq[:, None, :, :], 0.0)
+        decay = jnp.exp(dlt)  # [B,Q,K,H]
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        att = CB[..., None] * decay * dtq[:, None, :, :]  # [B,Q,K,H]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", att, xq)
+        # ---- contribution from the carried state ----
+        y_inter = jnp.einsum("bqgn,bhpn->bqhp", Cq, state) * \
+            jnp.exp(cq)[..., None]
+        # ---- update state ----
+        decay_last = jnp.exp(jnp.minimum(cq[:, -1:, :] - cq, 0.0))  # [B,Q,H]
+        dB = Bq[:, :, 0, :]  # G=1 -> [B,Q,N]
+        s_local = jnp.einsum("bqh,bqn,bqhp->bhpn", decay_last * dtq, dB, xq)
+        chunk_decay = jnp.exp(cq[:, -1, :])  # [B,H]
+        state = state * chunk_decay[:, :, None, None] + s_local
+        return state, y_intra + y_inter
+
+    blks = tuple(jnp.moveaxis(t, 1, 0) for t in (x, Bm, Cm, dt, cums, dA))
+    final_state, ys = jax.lax.scan(chunk_step, init_state, blks)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, P)
+    return y, final_state
+
+
+def ssd_decode_step(cfg: ModelConfig, x1, B1, C1, dt1, A_log, dt_bias, state):
+    """Single-token SSD recurrence. x1: [B,H,P]; B1/C1: [B,G*N]; dt1: [B,H].
+    state: [B,H,P,N] -> (y [B,H,P], state')."""
+    N = cfg.ssm_state
+    dt = jax.nn.softplus(dt1.astype(jnp.float32) + dt_bias)  # [B,H]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dA = jnp.exp(dt * A)  # [B,H]
+    Bv = B1.reshape(-1, _G, N)[:, 0].astype(jnp.float32)  # [B,N]
+    Cv = C1.reshape(-1, _G, N)[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bv, x1.astype(jnp.float32))
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# full layer (+ model wrappers)
+# ---------------------------------------------------------------------------
+
+
+def mamba_block(p, x, cfg: ModelConfig, conv_state=None, ssm_state=None,
+                single_step=False):
+    """x: [B, S, D] (S==1 with single_step) -> (out, conv_state', ssm_state')."""
+    B, S, D = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    h = common.rms_norm(x, p["ln"], upcast=not cfg.tp_bf16_reduce)
+    zxbcdt = common.qdot(h, p["in_proj"], cfg.quant)
+    z, xs, B_, C_, dt = _split_proj(cfg, zxbcdt)
+    xBC = jnp.concatenate([xs, B_, C_], axis=-1)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    Di = cfg.ssm_d_inner
+    xs, B_, C_ = (xBC[..., :Di], xBC[..., Di:Di + _G * cfg.ssm_state],
+                  xBC[..., Di + _G * cfg.ssm_state:])
+    if single_step:
+        y, ssm_state = ssd_decode_step(
+            cfg, xs[:, 0].reshape(B, H, P), B_[:, 0], C_[:, 0], dt[:, 0],
+            p["A_log"], p["dt_bias"], ssm_state)
+        y = y[:, None]  # [B,1,H,P]
+        dskip = xs.reshape(B, S, H, P).astype(jnp.float32)
+    else:
+        y, ssm_state = ssd_forward(cfg, xs, B_, C_, dt, p["A_log"],
+                                   p["dt_bias"], ssm_state)
+        dskip = xs.reshape(B, S, H, P).astype(jnp.float32)
+    y = y + dskip * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, Di).astype(x.dtype)
+    y = common.rms_norm(y, p["norm"]) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = common.qdot(y, p["out_proj"], cfg.quant, prec_dtype=common.tp_prec(cfg))
+    return out, conv_state, ssm_state
+
+
+def apply(params, batch, cfg: ModelConfig):
+    """Training/prefill forward -> logits [B, S, V]."""
+    x = common.embed_tokens(params["embed"], batch["tokens"], cfg)
+
+    def body(carry, layer_params):
+        x = carry
+        out, _, _ = mamba_block(layer_params, x, cfg)
+        x = x + out
+        x = sharding.constrain(x, ("batch", None, "embed_act"))
+        return x, None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat == "layer" else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"])
+    return common.logits_head(x, params["embed"], cfg, transpose=True)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """SSM decode state: O(1) in sequence length (no KV cache)."""
+    L = cfg.n_layers
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.ssm_d_inner + 2 * _G * N
+    return {
+        "ssm": ParamSpec((L, batch, H, P, N), ("layers", "batch", "ssm_heads", None, None), "zeros"),
+        "conv": ParamSpec((L, batch, cfg.ssm_conv - 1, conv_ch),
+                          ("layers", "batch", None, "ssm_heads"), "zeros", jnp.float32),
+        "length": ParamSpec((batch,), ("batch",), "zeros", jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq),
+                        is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq=None):
+    x = common.embed_tokens(params["embed"], batch["tokens"], cfg)
+
+    def body(x, layer_params):
+        out, conv_s, ssm_s = mamba_block(layer_params, x, cfg)
+        x = x + out
+        return x, (conv_s, ssm_s)
+
+    x, (conv_s, ssm_s) = jax.lax.scan(body, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    B, S = batch["tokens"].shape
+    cache = {"ssm": ssm_s, "conv": conv_s.astype(jnp.float32),
+             "length": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    B = tokens.shape[0]
+    x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
+
+    def body(x, xs):
+        layer_params, conv_s, ssm_s = xs
+        out, conv_s, ssm_s = mamba_block(
+            layer_params, x, cfg, conv_state=conv_s, ssm_state=ssm_s,
+            single_step=True)
+        return x + out, (conv_s, ssm_s)
+
+    x, (conv_s, ssm_s) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    return logits[:, 0], {"ssm": ssm_s, "conv": conv_s,
+                          "length": cache["length"] + 1}

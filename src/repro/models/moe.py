@@ -1,0 +1,294 @@
+"""Mixture-of-Experts LM — qwen3-moe-235b (128e top-8) and
+deepseek-moe-16b (2 shared + 64 routed top-6, fine-grained).
+
+Expert dispatch is sort-based with a capacity limit (GShard-style dropping,
+the scheme production JAX MoE stacks use): token->expert choices are sorted
+by expert id, ranked within expert, scattered into an [E, C, D] buffer that
+is *expert-sharded over the model axis* (EP) — XLA SPMD materializes the
+all-to-alls.  Attention/embedding blocks reuse `transformer`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding
+from . import common, transformer
+from .config import ModelConfig
+from .module import ParamSpec
+
+
+def param_specs(cfg: ModelConfig):
+    specs = transformer.param_specs(cfg)
+    L, D, E, Fe = cfg.n_layers, cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    layers = specs["layers"]
+    # replace the dense FFN with routed experts (+ optional shared experts)
+    for k in ("wi_gate", "wi_up", "wo_mlp"):
+        del layers[k]
+    layers.update({
+        "router": ParamSpec((L, D, E), ("layers", "embed", "experts"), "fan_in"),
+        "we_gate": ParamSpec((L, E, D, Fe), ("layers", "experts", "embed", "expert_mlp"), "fan_in"),
+        "we_up": ParamSpec((L, E, D, Fe), ("layers", "experts", "embed", "expert_mlp"), "fan_in"),
+        "we_down": ParamSpec((L, E, Fe, D), ("layers", "experts", "expert_mlp", "embed"), "fan_in"),
+    })
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * Fe
+        layers.update({
+            "ws_gate": ParamSpec((L, D, Fs), ("layers", "embed", "mlp"), "fan_in"),
+            "ws_up": ParamSpec((L, D, Fs), ("layers", "embed", "mlp"), "fan_in"),
+            "ws_down": ParamSpec((L, Fs, D), ("layers", "mlp", "embed"), "fan_in"),
+        })
+    return specs
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """Routed expert FFN. x: [B, S, D] -> ([B, S, D], aux_loss scalar)."""
+    if cfg.moe_grouped_dispatch:
+        return moe_ffn_grouped(p, x, cfg)
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    # --- router ------------------------------------------------------------
+    logits = jnp.dot(xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    vals, ids = jax.lax.top_k(probs, k)      # [T, k]
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * sum(f_e * p_e)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(
+        jnp.ones((T * k,), jnp.float32)) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch with capacity ---------------------------------
+    C = int(T * k / E * cfg.capacity_factor)
+    C = max(8, -(-C // 8) * 8)
+    flat_e = ids.reshape(-1)                           # [T*k]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)  # E*C == drop bucket
+    tok = order // k
+
+    buf = jnp.zeros((E * C, D), x.dtype).at[slot].set(xf[tok], mode="drop")
+    cap_axis = "expert_cap" if cfg.shard_expert_cap else None
+    buf = sharding.constrain(buf.reshape(E, C, D),
+                             ("experts", cap_axis, "embed_act"))
+
+    # --- expert computation (EP over the model axis) -----------------------
+    wq = cfg.quant
+    g = jnp.einsum("ecd,edf->ecf", wq.maybe_quant_act(buf),
+                   wq.maybe_quant_weight(p["we_gate"].astype(x.dtype)),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", wq.maybe_quant_act(buf),
+                   wq.maybe_quant_weight(p["we_up"].astype(x.dtype)),
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    h = sharding.constrain(h, ("experts", cap_axis, "expert_mlp"))
+    out_e = jnp.einsum("ecf,efd->ecd", wq.maybe_quant_act(h),
+                       wq.maybe_quant_weight(p["we_down"].astype(x.dtype)),
+                       preferred_element_type=common.tp_prec(cfg)).astype(x.dtype)
+    out_e = out_e.reshape(E * C, D)
+
+    # --- combine ------------------------------------------------------------
+    slot_c = jnp.minimum(slot, E * C - 1)
+    per_choice = jnp.where(keep[:, None], out_e[slot_c], 0.0)
+    per_choice = per_choice * vals.reshape(-1)[order][:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok].add(per_choice)
+    y = y.reshape(B, S, D)
+
+    # --- shared experts (deepseek-moe) --------------------------------------
+    if cfg.n_shared_experts:
+        hn = x  # shared experts see the same normalized input as routed ones
+        g = common.qdot(hn, p["ws_gate"], wq)
+        u = common.qdot(hn, p["ws_up"], wq)
+        hs = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        y = y + common.qdot(hs, p["ws_down"], wq, prec_dtype=common.tp_prec(cfg))
+    return y, aux
+
+
+def moe_ffn_grouped(p, x, cfg: ModelConfig):
+    """GShard-style grouped dispatch: each sequence is a routing group.
+
+    All index-space work (top-k, sort, rank, scatter, combine-gather) is
+    vmapped over the batch dim, which is sharded over (pod, data) — it
+    stays shard-local.  The only cross-device movement is the expert einsum
+    itself: buf [B, E, Cg, D] is batch-sharded x expert-sharded, which is
+    exactly the EP exchange pattern, instead of SPMD replicating a global
+    [B*S*k, D] gather/scatter (the flat path's failure mode — §Perf)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    Cg = int(S * k / E * cfg.capacity_factor)
+    Cg = max(4, -(-Cg // 4) * 4)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # [B, S, E]
+    vals, ids = jax.lax.top_k(probs, k)      # [B, S, k]
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(
+        jnp.ones((B * S * k,), jnp.float32)) / (B * S * k)
+    aux = E * jnp.sum(me * ce)
+
+    def dispatch_group(xf, ids_g):
+        """xf: [S, D]; ids_g: [S, k] -> (buf, slot, tok, keep, order)."""
+        flat_e = ids_g.reshape(-1)                       # [S*k]
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(S * k, dtype=jnp.int32) - starts[sorted_e]
+        keep = rank < Cg
+        slot = jnp.where(keep, sorted_e * Cg + rank, E * Cg)
+        tok = order // k
+        buf = jnp.zeros((E * Cg, D), x.dtype).at[slot].set(xf[tok], mode="drop")
+        return buf, slot, tok, keep, order
+
+    buf, slot, tok, keep, order = jax.vmap(dispatch_group)(x, ids)
+    buf = buf.reshape(B, E, Cg, D)
+    # two-phase: the scatter runs batch-local (replicated over 'model'),
+    # THEN the buffer reshard to expert sharding is one clean collective —
+    # keeps SPMD from partitioning the scatter itself (AR-of-one-hot blowup)
+    buf = sharding.constrain(buf, ("batch", None, None, "embed_act"))
+    buf = sharding.constrain(buf, ("batch", "experts", None, "embed_act"))
+
+    wq = cfg.quant
+    g = jnp.einsum("becd,edf->becf", wq.maybe_quant_act(buf),
+                   wq.maybe_quant_weight(p["we_gate"].astype(x.dtype)),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("becd,edf->becf", wq.maybe_quant_act(buf),
+                   wq.maybe_quant_weight(p["we_up"].astype(x.dtype)),
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    h = sharding.constrain(h, ("batch", "experts", None, "expert_mlp"))
+    out_e = jnp.einsum("becf,efd->becd", wq.maybe_quant_act(h),
+                       wq.maybe_quant_weight(p["we_down"].astype(x.dtype)),
+                       preferred_element_type=common.tp_prec(cfg)).astype(x.dtype)
+    out_e = sharding.constrain(out_e, ("batch", "experts", None, "embed_act"))
+
+    def combine_group(out_g, slot_g, tok_g, keep_g, order_g, vals_g):
+        out_flat = out_g.reshape(E * Cg, D)
+        per_choice = jnp.where(keep_g[:, None],
+                               out_flat[jnp.minimum(slot_g, E * Cg - 1)], 0.0)
+        w = vals_g.reshape(-1)[order_g][:, None].astype(out_flat.dtype)
+        return jnp.zeros((S, D), out_flat.dtype).at[tok_g].add(per_choice * w)
+
+    y = jax.vmap(combine_group)(out_e, slot, tok, keep, order, vals)
+    y = sharding.constrain(y, ("batch", None, "embed_act"))
+
+    if cfg.n_shared_experts:
+        g2 = common.qdot(x, p["ws_gate"], wq)
+        u2 = common.qdot(x, p["ws_up"], wq)
+        hs = jax.nn.silu(g2.astype(jnp.float32)).astype(x.dtype) * u2
+        y = y + common.qdot(hs, p["ws_down"], wq,
+                            prec_dtype=common.tp_prec(cfg))
+    return y, aux
+
+
+def _layer(p, x, cfg: ModelConfig, q_pos, kv_pos, is_global):
+    attn, k, v = transformer._attn_block(p, x, cfg, q_pos, kv_pos, is_global)
+    x = x + attn
+    h = common.rms_norm(x, p["ln2"], upcast=not cfg.tp_bf16_reduce)
+    ff, aux = moe_ffn(p, h, cfg)
+    x = x + ff
+    x = sharding.constrain(x, ("batch", None, "embed_act"))
+    return x, aux
+
+
+def apply(params, batch, cfg: ModelConfig, collect_cache: bool = False,
+          with_aux: bool = False):
+    x = transformer._embed_inputs(params, batch, cfg)
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    flags = transformer.layer_flags(cfg)
+
+    def body(carry, xs):
+        layer_params, is_global = xs
+        x = carry
+        attn, k, v = transformer._attn_block(layer_params, x, cfg, pos, pos, is_global)
+        x = x + attn
+        h = common.rms_norm(x, layer_params["ln2"], upcast=not cfg.tp_bf16_reduce)
+        ff, aux = moe_ffn(layer_params, h, cfg)
+        x = x + ff
+        x = sharding.constrain(x, ("batch", None, "embed_act"))
+        return x, (aux, (k, v) if collect_cache else None)
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat == "layer" else body
+    x, (auxes, kvs) = jax.lax.scan(body_fn, x, (params["layers"], flags))
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(
+        x, params["embed"] if cfg.tie_embeddings else params["head"],
+        cfg, transpose=cfg.tie_embeddings)
+    aux = jnp.mean(auxes)
+    outs = [logits]
+    if collect_cache:
+        outs.append(kvs)
+    if with_aux:
+        outs.append(aux)
+    return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+cache_specs = transformer.cache_specs
+init_cache = transformer.init_cache
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq=None):
+    logits, (ks, vs) = apply(params, batch, cfg, collect_cache=True)
+    B, S = ks.shape[1], ks.shape[2]
+    max_seq = max_seq or S
+    fold = lambda t: common.kv_encode(cfg, t.reshape(cfg.n_layers, B, S, -1))
+    k_cache, v_cache = fold(ks), fold(vs)
+    if max_seq > S:
+        pad = ((0, 0), (0, 0), (0, max_seq - S), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    return logits, {"k": k_cache, "v": v_cache,
+                    "length": jnp.full((B,), S, jnp.int32)}
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    """One autoregressive step with MoE FFN."""
+    B = tokens.shape[0]
+    x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
+    S_max = cache["k"].shape[2]
+    length = cache["length"]
+    q_pos = length[:, None]
+    kv_pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32)[None], (B, S_max))
+    flags = transformer.layer_flags(cfg)
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+
+    def body(x, xs):
+        p, is_global, k_l, v_l = xs
+        h = common.rms_norm(x, p["ln1"])
+        q = common.qdot(h, p["wq"], cfg.quant).reshape(B, 1, cfg.n_heads, Dh)
+        k = common.qdot(h, p["wk"], cfg.quant).reshape(B, 1, Hkv, Dh)
+        v = common.qdot(h, p["wv"], cfg.quant).reshape(B, 1, Hkv, Dh)
+        if cfg.qk_norm:
+            q = common.rms_norm(q, p["q_norm"])
+            k = common.rms_norm(k, p["k_norm"])
+        q = common.rope(q, q_pos, cfg.rope_theta)
+        k = common.rope(k, q_pos, cfg.rope_theta)
+        k_new = transformer._cache_insert(k_l, common.kv_encode(cfg, k.reshape(B, 1, -1)), length)
+        v_new = transformer._cache_insert(v_l, common.kv_encode(cfg, v.reshape(B, 1, -1)), length)
+        kc = common.kv_decode(cfg, k_new).reshape(B, S_max, Hkv, Dh)
+        vc = common.kv_decode(cfg, v_new).reshape(B, S_max, Hkv, Dh)
+        attn = common.decode_attention(q, kc, vc, length + 1, kv_pos,
+                                       window=None, softcap_val=cfg.logit_softcap)
+        x = x + common.qdot(attn.reshape(B, 1, cfg.n_heads * Dh), p["wo"], cfg.quant)
+        h = common.rms_norm(x, p["ln2"], upcast=not cfg.tp_bf16_reduce)
+        ff, _ = moe_ffn(p, h, cfg)
+        x = x + ff
+        return x, (k_new, v_new)
+
+    x, (k_c, v_c) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(
+        x, params["embed"] if cfg.tie_embeddings else params["head"],
+        cfg, transpose=cfg.tie_embeddings)
+    return logits[:, 0], {"k": k_c, "v": v_c, "length": length + 1}

@@ -1,0 +1,6 @@
+"""Optimizers + schedules + posit-compressed gradient collectives."""
+from .optimizers import (  # noqa: F401
+    Optimizer, adamw, adafactor, sgdm, by_name,
+    cosine_schedule, constant_schedule, clip_by_global_norm, global_norm,
+)
+from . import compress  # noqa: F401

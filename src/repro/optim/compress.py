@@ -1,0 +1,95 @@
+"""Posit-compressed gradient all-reduce with error feedback.
+
+The paper's thesis — posit formats keep accuracy at much lower bit-width —
+applied to the *distributed-optimization* layer: cross-pod gradient
+reduction is the bandwidth-starved collective at 1000+-node scale (DCN or
+long ICI hops), so we ship P(8,2) codes (4x fewer bytes than f32) over the
+slow axis and keep full-precision reductions on the fast in-pod axis.
+
+Algorithm (ring reduce-scatter + all-gather, both on int8 wire):
+    e      <- error-feedback residual (persistent, same tree as grads)
+    q      = posit8_encode(g + e)            # one rounding
+    e'     = (g + e) - posit8_decode(q)      # residual stays local
+    shards = all_to_all(q)                   # int8 wire
+    s      = sum(posit8_decode(shards))      # exact f32 accumulate (PDPU rule)
+    out    = all_gather(posit8_encode(s))    # int8 wire, one more rounding
+    return posit8_decode(out) / axis_size
+
+Error feedback makes the scheme unbiased over steps; the wide f32 local
+accumulation mirrors the PDPU contract (narrow operands, wide accumulator).
+
+These functions use collective primitives with axis names, so they run
+inside `shard_map` (see train.train_step_compressed) — that is where the
+int8 wire traffic becomes visible to the compiler/HLO (verified by the
+collective-bytes parser in benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.formats import PositFormat, P8_2
+
+
+def _pad_to(x, mult):
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x
+
+
+def compressed_psum_leaf(g, err, axis_name: str, fmt: PositFormat = P8_2):
+    """One leaf: returns (mean-reduced g, new error residual)."""
+    n = jax.lax.psum(1, axis_name)
+    shape = g.shape
+    gf = g.reshape(-1).astype(jnp.float32) + err.reshape(-1)
+    L = gf.shape[0]
+
+    codes = posit.pack(gf, fmt)                       # int8 codes
+    new_err = gf - posit.unpack(codes, fmt)           # stage-1 residual
+
+    padded = _pad_to(codes, n)
+    Ls = padded.shape[0] // n
+    # ring reduce-scatter on int8 wire: each device receives every peer's
+    # shard of its segment
+    shards = jax.lax.all_to_all(padded.reshape(n, Ls), axis_name, 0, 0,
+                                tiled=False)          # [n, Ls] int8
+    local_sum = jnp.sum(posit.unpack(shards, fmt), axis=0)  # exact f32 acc
+    out_codes = posit.pack(local_sum, fmt)            # second (final) rounding
+    # stage-2 residual: the segment owner feeds the sum-space rounding error
+    # back into its own next gradient (debiases the all-gather rounding too)
+    seg_err = local_sum - posit.unpack(out_codes, fmt)
+    idx = jax.lax.axis_index(axis_name)
+    err_flat = _pad_to(new_err, n)
+    err_flat = jax.lax.dynamic_update_slice(
+        err_flat, jax.lax.dynamic_slice(err_flat, (idx * Ls,), (Ls,)) + seg_err,
+        (idx * Ls,))
+    new_err = err_flat[:L]
+    full = jax.lax.all_gather(out_codes, axis_name)   # [n, Ls] int8 wire
+    total = posit.unpack(full.reshape(-1)[:L], fmt)
+    return (total / n).reshape(shape), new_err.reshape(shape)
+
+
+def compressed_psum(grads, err_tree, axis_name: str, fmt: PositFormat = P8_2):
+    """Tree version. Returns (reduced grads, new error tree)."""
+    pairs = jax.tree.map(
+        lambda g, e: compressed_psum_leaf(g, e, axis_name, fmt), grads, err_tree)
+    red = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+    err = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+    return red, err
+
+
+def init_error_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def wire_bytes(params, n_devices: int, fmt: PositFormat = P8_2) -> dict:
+    """Analytical wire-traffic comparison for one gradient reduction."""
+    n_elems = sum(x.size for x in jax.tree.leaves(params))
+    f32 = 2 * n_elems * 4 * (n_devices - 1) / n_devices  # ring AR bytes/dev
+    comp = 2 * n_elems * (fmt.storage_bits // 8) * (n_devices - 1) / n_devices
+    return {"f32_allreduce_bytes": f32, "posit_bytes": comp,
+            "ratio": f32 / comp}

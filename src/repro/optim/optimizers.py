@@ -1,0 +1,192 @@
+"""From-scratch optimizers (no optax in this environment).
+
+Interface mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``; updates are added
+to params by the caller.  All states are pytrees shardable like params
+(FSDP-friendly: moments inherit the parameters' logical axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * (step + 1) / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return lr
+
+
+def constant_schedule(lr_val: float):
+    return lambda step: jnp.float32(lr_val)
+
+
+# ---------------------------------------------------------------------------
+# gradient transforms
+# ---------------------------------------------------------------------------
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def adamw(lr: Callable, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          max_grad_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr(step)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — frees one full-size state tensor;
+# the memory-side companion to the paper's "lower precision, wider reach")
+# ---------------------------------------------------------------------------
+
+class FactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: object  # row stats (or full v for <2D leaves)
+    vc: object  # col stats (or None sentinel)
+
+
+def adafactor(lr: Callable, eps=1e-30, clip_thresh=1.0,
+              weight_decay=0.0) -> Optimizer:
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                    else jnp.zeros_like(p, dtype=jnp.float32))
+
+        def vc(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((), jnp.float32))
+
+        return FactorState(jnp.zeros((), jnp.int32),
+                           jax.tree.map(vr, params), jax.tree.map(vc, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** -0.8
+        lr_t = lr(step)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr_n = beta * vr + (1 - beta) * g2.mean(-1)
+                vc_n = beta * vc + (1 - beta) * g2.mean(-2)
+                denom = (vr_n[..., None] * vc_n[..., None, :]
+                         / jnp.maximum(vr_n.mean(-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+            else:
+                vr_n = beta * vr + (1 - beta) * g2
+                vc_n = vc
+                u = g * jax.lax.rsqrt(vr_n + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), vr_n, vc_n
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+        vr = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+        vc = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+        return updates, FactorState(step, vr, vc)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (baseline)
+# ---------------------------------------------------------------------------
+
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+    mom: object
+
+
+def sgdm(lr: Callable, momentum=0.9) -> Optimizer:
+    def init(params):
+        return SgdState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                           state.mom, grads)
+        lr_t = lr(step)
+        updates = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype), mom, params)
+        return updates, SgdState(step, mom)
+
+    return Optimizer(init, update)
+
+
+def by_name(name: str, lr_fn) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn)
+    if name == "adafactor":
+        return adafactor(lr_fn)
+    if name == "sgdm":
+        return sgdm(lr_fn)
+    raise KeyError(f"unknown optimizer '{name}'")

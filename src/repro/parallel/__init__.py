@@ -1,0 +1,2 @@
+"""Distribution: logical-axis sharding rules (DP/FSDP/TP/EP/SP)."""
+from . import sharding  # noqa: F401

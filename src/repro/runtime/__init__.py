@@ -1,0 +1,5 @@
+"""Fault-tolerance control plane: heartbeats, stragglers, elastic rescale."""
+from .fault_tolerance import (  # noqa: F401
+    HeartbeatMonitor, HeartbeatConfig, StragglerDetector, NaNGuard,
+    plan_rescale, RescalePlan,
+)

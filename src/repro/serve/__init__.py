@@ -1,0 +1,2 @@
+"""Serving: continuous batching engine over jit'd prefill/decode."""
+from .engine import ServingEngine, Request  # noqa: F401

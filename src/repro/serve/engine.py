@@ -1,0 +1,120 @@
+"""Serving engine: jit'd prefill/decode steps + continuous batching.
+
+Slot-based continuous batching: the decode step always runs a fixed [B]
+batch; finished sequences free their slot and the host control loop refills
+it by prefilling a queued request into that slot (cache splice).  This is
+the standard TPU serving shape (fixed shapes, no recompilation) — the KV
+cache may be posit-coded per the model's QuantPolicy, halving/quartering
+the decode memory roofline (the PDPU storage-format win).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: Optional[list] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int,
+                 max_seq: int, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.S = max_seq
+        self.greedy = greedy
+        self._decode = jax.jit(
+            lambda p, t, c: api.decode_step(p, t, c, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(p, b, cfg, max_seq=max_seq))
+        self.cache = api.init_cache(cfg, batch_slots, max_seq)
+        from repro.models.module import ParamSpec
+        self.cache_bdim = jax.tree.map(
+            lambda s: s.logical_axes.index("batch"),
+            api.cache_specs(cfg, batch_slots, max_seq),
+            is_leaf=lambda s: isinstance(s, ParamSpec))
+        self.slot_free = [True] * batch_slots
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_remaining = np.zeros(batch_slots, np.int64)
+        self.next_token = np.zeros(batch_slots, np.int32)
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.out_tokens = []
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for slot in range(self.B):
+            if not self.slot_free[slot] or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, cache1 = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt[None])})
+            # splice single-row cache into this slot
+            self.cache = jax.tree.map(
+                lambda full, one, bdim: _slot_update(full, one, slot, bdim),
+                self.cache, cache1, self.cache_bdim)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.out_tokens.append(tok)
+            self.next_token[slot] = tok
+            self.slot_free[slot] = False
+            self.slot_req[slot] = req
+            self.slot_remaining[slot] = req.max_new_tokens - 1
+
+    def _retire(self, slot: int):
+        req = self.slot_req[slot]
+        self.done.append(req)
+        self.slot_free[slot] = True
+        self.slot_req[slot] = None
+
+    def step(self):
+        """One engine iteration: refill free slots, one decode step."""
+        self._fill_slots()
+        if all(self.slot_free):
+            return False
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self.next_token), self.cache)
+        toks = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        for slot in range(self.B):
+            if self.slot_free[slot]:
+                continue
+            req = self.slot_req[slot]
+            tok = int(toks[slot])
+            req.out_tokens.append(tok)
+            self.next_token[slot] = tok
+            self.slot_remaining[slot] -= 1
+            if self.slot_remaining[slot] <= 0 or (
+                    req.eos_id is not None and tok == req.eos_id):
+                self._retire(slot)
+        return True
+
+    def run(self, max_iters: int = 10_000):
+        it = 0
+        while (self.queue or not all(self.slot_free)) and it < max_iters:
+            if not self.step():
+                break
+            it += 1
+        return self.done
+
+
+def _slot_update(full, one, slot: int, bdim: int):
+    """Insert a batch-1 cache leaf into slot `slot` along dim `bdim`
+    (batch dims come from the cache ParamSpec logical axes)."""
+    idx = tuple([slice(None)] * bdim + [slice(slot, slot + 1)])
+    return full.at[idx].set(one.astype(full.dtype))

@@ -1,0 +1,3 @@
+"""Training: microbatched step, compressed-gradient step, trainer loop."""
+from .step import TrainState, init_state, make_train_step, make_train_step_compressed, loss_fn  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

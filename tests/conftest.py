@@ -1,0 +1,9 @@
+# NOTE: deliberately no XLA_FLAGS here — tests must see the real 1-device
+# world; multi-device tests spawn subprocesses that set their own flags.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

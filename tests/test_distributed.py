@@ -1,0 +1,188 @@
+"""Distribution tests: sharding-rule unit tests on synthetic meshes, and
+multi-device integration via subprocesses (the only way to get >1 device
+in a CPU test without polluting the session's device count)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.parallel import sharding
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV8 = {**os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def _run(code: str, env=ENV8, timeout=600):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (pure logic — works on 1 device via Mesh abstract use)
+# ---------------------------------------------------------------------------
+
+def test_spec_for_divisibility_and_fallback():
+    import jax
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(1, 1),
+                             ("data", "model"))
+    # synthetic mesh shape checks go through mesh.shape; fabricate via Mesh
+    # of 1x1 (all rules drop to None because axis size 1)
+    spec = sharding.spec_for((64, 128), ("embed", "heads"), mesh)
+    assert spec == jax.sharding.PartitionSpec(None, None)
+
+
+def test_spec_for_on_8dev():
+    out = _run("""
+        import jax, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel import sharding
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        # divisible: shard both
+        s = sharding.spec_for((64, 128), ("embed", "heads"), mesh)
+        assert s == P("data", "model"), s
+        # non-divisible heads dim (129 % 4 != 0) -> replicated
+        s = sharding.spec_for((64, 129), ("embed", "heads"), mesh)
+        assert s == P("data", None), s
+        # tuple axis with shrink: batch=2 on (pod,data) mesh missing pod
+        s = sharding.spec_for((2, 16), ("batch", None), mesh)
+        assert s == P("data", None), s
+        # axis used once only
+        s = sharding.spec_for((8, 8), ("heads", "mlp"), mesh)
+        assert s == P("model", None), s
+        print("SPECS-OK")
+    """)
+    assert "SPECS-OK" in out
+
+
+def test_train_step_multidevice_matches_single():
+    """Loss trajectory on a 2x2 mesh must match the 1-device run."""
+    code = """
+        import jax, numpy as np, jax.numpy as jnp
+        from repro import configs
+        from repro.models.config import ShapeConfig
+        from repro.models.module import ParamSpec, abstract_params
+        from repro.optim import adamw, constant_schedule
+        from repro.train import step as step_lib
+        from repro.parallel import sharding as sh
+        from repro.data import Pipeline, DataConfig
+
+        cfg = configs.get_smoke("minitron_8b").replace(dtype="float32")
+        shape = ShapeConfig("t", 32, 8, "train")
+        opt = adamw(constant_schedule(1e-3))
+        pipe = Pipeline(cfg, shape)
+        batches = [jax.tree.map(jnp.asarray, pipe.batch_at(s)) for s in range(3)]
+
+        def run(mesh):
+            state = step_lib.init_state(jax.random.key(0), cfg, opt)
+            ts = jax.jit(step_lib.make_train_step(cfg, opt, accum=2))
+            losses = []
+            if mesh is None:
+                for b in batches:
+                    state, m = ts(state, b)
+                    losses.append(float(m["loss"]))
+            else:
+                with mesh:
+                    for b in batches:
+                        state, m = ts(state, b)
+                        losses.append(float(m["loss"]))
+            return losses
+
+        l1 = run(None)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        l2 = run(mesh)
+        print("L1", l1)
+        print("L2", l2)
+        assert np.allclose(l1, l2, rtol=2e-4, atol=2e-4), (l1, l2)
+        print("MULTIDEV-OK")
+    """
+    assert "MULTIDEV-OK" in _run(code)
+
+
+def test_compressed_grad_allreduce_2pods():
+    """shard_map posit-compressed cross-pod training step runs and learns."""
+    code = """
+        import jax, numpy as np, jax.numpy as jnp
+        from repro import configs
+        from repro.models.config import ShapeConfig
+        from repro.optim import adamw, constant_schedule
+        from repro.train import step as step_lib
+        from repro.data import Pipeline
+
+        cfg = configs.get_smoke("minitron_8b").replace(dtype="float32")
+        shape = ShapeConfig("t", 16, 8, "train")
+        opt = adamw(constant_schedule(2e-3))
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        ts = step_lib.make_train_step_compressed(cfg, opt, mesh)
+        state = step_lib.init_state(jax.random.key(0), cfg, opt)
+        err = ts.init_err(state.params)
+        pipe = Pipeline(cfg, shape)
+        losses = []
+        carry = (state, err)
+        with mesh:
+            tsj = jax.jit(ts)
+            for s in range(8):
+                carry, m = tsj(carry, jax.tree.map(jnp.asarray, pipe.batch_at(s)))
+                losses.append(float(m["loss"]))
+        print("losses", losses)
+        assert losses[-1] < losses[0]
+        # HLO really ships int8 over the pod axis
+        lowered = jax.jit(ts).lower(carry, jax.tree.map(jnp.asarray, pipe.batch_at(0)))
+        txt = lowered.compile().as_text()
+        assert ("s8[" in txt and ("all-to-all" in txt or "all-gather" in txt))
+        print("COMPRESS-OK")
+    """
+    assert "COMPRESS-OK" in _run(code)
+
+
+def test_dryrun_cell_small_mesh():
+    """The dry-run builder compiles a smoke arch on an 8-device 3-axis mesh
+    (mini multi-pod) for all three step kinds."""
+    code = """
+        import jax
+        from repro import configs
+        from repro.launch import dryrun
+        from repro.models.config import ShapeConfig
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        cfg = configs.get_smoke("qwen3_moe_235b")
+        for kind, shape in [("train", ShapeConfig("t", 64, 8, "train")),
+                            ("prefill", ShapeConfig("p", 64, 8, "prefill")),
+                            ("decode", ShapeConfig("d", 64, 8, "decode"))]:
+            lowered = dryrun.build_lowered(cfg, shape, mesh)
+            compiled = lowered.compile()
+            rec = dryrun.analyze(lowered, compiled, cfg, shape, mesh, 0.0)
+            assert rec["roofline"]["hlo_flops_per_dev"] > 0
+            print(kind, "ok", rec["roofline"]["dominant"])
+        print("DRYRUN-OK")
+    """
+    assert "DRYRUN-OK" in _run(code)
+
+
+def test_elastic_restore_across_meshes():
+    """Checkpoint written on a (2,4) mesh restores onto (4,2) and 1-dev."""
+    code = """
+        import tempfile, jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import CheckpointManager
+
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mesh1 = jax.make_mesh((2, 4), ("data", "model"))
+            w1 = jax.device_put(tree["w"], NamedSharding(mesh1, P("data", "model")))
+            mgr.save(1, {"w": w1})
+            mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+            sh2 = {"w": NamedSharding(mesh2, P("model", "data"))}
+            got = mgr.restore(1, {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}, sh2)
+            assert (np.asarray(got["w"]) == np.asarray(tree["w"])).all()
+            assert got["w"].sharding == sh2["w"]
+        print("ELASTIC-OK")
+    """
+    assert "ELASTIC-OK" in _run(code)

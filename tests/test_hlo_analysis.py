@@ -1,0 +1,58 @@
+"""The trip-count-aware HLO analyzer is the roofline's measurement tool —
+validate it against hand-countable programs (XLA's own cost_analysis counts
+loop bodies once, which is why this exists)."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+X = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+
+def _flops(f, *args):
+    txt = jax.jit(f).lower(*args).compile().as_text()
+    return analyze_hlo(txt)["flops"]
+
+
+def test_single_dot():
+    got = _flops(lambda x, w: jnp.dot(x, w), X, X)
+    assert got == 2 * 128 ** 3
+
+
+def test_scan_multiplies_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return jnp.dot(c, w).astype(jnp.float32), None
+        return jax.lax.scan(body, x, None, length=17)[0]
+    assert _flops(f, X, X) == 17 * 2 * 128 ** 3
+
+
+def test_nested_scan():
+    def f(x, w):
+        def inner(c, _):
+            return jnp.dot(c, w).astype(jnp.float32), None
+        def outer(c, _):
+            return jax.lax.scan(inner, c, None, length=3)[0], None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+    assert _flops(f, X, X) == 15 * 2 * 128 ** 3
+
+
+def test_rectangular_dot_contraction():
+    a = jax.ShapeDtypeStruct((32, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 8), jnp.float32)
+    got = _flops(lambda x, w: jnp.dot(x, w), a, b)
+    assert got == 2 * 32 * 512 * 8
+
+
+def test_hbm_bytes_scale_with_scan():
+    def f1(x, w):
+        return jnp.dot(x, w)
+    def f17(x, w):
+        def body(c, _):
+            return jnp.dot(c, w).astype(jnp.float32), None
+        return jax.lax.scan(body, x, None, length=17)[0]
+    t1 = jax.jit(f1).lower(X, X).compile().as_text()
+    t17 = jax.jit(f17).lower(X, X).compile().as_text()
+    b1 = analyze_hlo(t1)["hbm_bytes"]
+    b17 = analyze_hlo(t17)["hbm_bytes"]
+    assert b17 > 10 * b1

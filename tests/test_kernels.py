@@ -1,0 +1,110 @@
+"""Pallas kernel sweeps (interpret mode on CPU) vs the pure-jnp oracles:
+shapes x dtypes x formats, asserting bit identity (codec/pdpu) or
+allclose (fused matmul f32 path)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import P8_2, P13_2, P16_2, PDPUConfig
+from repro.kernels import ops, ref
+
+SHAPES_ELTWISE = [(8, 128), (256, 512), (300, 700), (17, 129), (1000,),
+                  (3, 5, 257), (1, 1)]
+FORMATS = [P8_2, P13_2, P16_2]
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=str)
+@pytest.mark.parametrize("shape", SHAPES_ELTWISE, ids=str)
+def test_decode_kernel_sweep(fmt, shape, rng):
+    codes = jnp.asarray(rng.integers(0, 1 << fmt.n, shape), jnp.int32)
+    got = np.asarray(ops.decode(codes, fmt))
+    want = np.asarray(ref.decode_ref(codes, fmt))
+    eq = (got == want) | (np.isnan(got) & np.isnan(want))
+    assert eq.all()
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=str)
+@pytest.mark.parametrize("shape", SHAPES_ELTWISE, ids=str)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=str)
+def test_encode_kernel_sweep(fmt, shape, dtype, rng):
+    x = jnp.asarray(rng.normal(0, 2, shape), dtype)
+    got = np.asarray(ops.encode(x, fmt))
+    want = np.asarray(ref.encode_ref(x, fmt))
+    assert (got == want).all()
+    assert got.dtype == want.dtype  # storage container dtype
+
+
+MM_CASES = [
+    ((64, 128, 96), P16_2, P16_2, P16_2, (32, 32, 64)),
+    ((130, 260, 70), P13_2, P13_2, P16_2, (64, 64, 128)),
+    ((32, 64, 32), P8_2, P8_2, None, (32, 32, 32)),
+    ((257, 129, 65), P13_2, P16_2, P13_2, (64, 64, 64)),  # mixed in-formats
+    ((8, 512, 8), P16_2, P16_2, None, (8, 8, 128)),
+]
+
+
+@pytest.mark.parametrize("case", MM_CASES, ids=lambda c: f"{c[0]}-{c[1]}-{c[3]}")
+def test_fused_matmul_sweep(case, rng):
+    (M, K, N), fa, fb, fo, (bm, bn, bk) = case
+    a = jnp.asarray(rng.integers(0, 1 << fa.n, (M, K)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 1 << fb.n, (K, N)), jnp.int32)
+    a = jnp.where(a == fa.nar_code, 0, a)
+    b = jnp.where(b == fb.nar_code, 0, b)
+    got = ops.fused_matmul(a, b, fa, fb, fo, bm=bm, bn=bn, bk=bk)
+    want = ref.posit_matmul_ref(a, b, fa, fb, fo, bk=bk)
+    if fo is None:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+    else:
+        assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_fused_matmul_single_rounding_property(rng):
+    """Kernel output == encode(f32 matmul of decoded inputs): exactly one
+    rounding (the fused property).
+
+    Two separately compiled f32 dots may reduce in different orders, so a
+    value sitting exactly on a posit rounding boundary can land one code
+    apart — allow off-by-one codes on <0.5% of outputs, nothing more."""
+    fa = fo = P16_2
+    a = jnp.asarray(rng.integers(0, 1 << 16, (48, 64)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 1 << 16, (64, 32)), jnp.int32)
+    a = jnp.where(a == fa.nar_code, 0, a)
+    b = jnp.where(b == fa.nar_code, 0, b)
+    from repro.core import posit
+    manual = posit.pack(
+        jnp.dot(posit.decode(a, fa), posit.decode(b, fa),
+                preferred_element_type=jnp.float32), fo)
+    got = np.asarray(ops.fused_matmul(a, b, fa, fa, fo, bm=16, bn=16, bk=64))
+    manual = np.asarray(manual)
+    diff = np.abs(got.astype(np.int64) - manual.astype(np.int64))
+    assert diff.max() <= 1, "more than one code apart => extra rounding"
+    assert (diff != 0).mean() < 0.005
+
+
+PDPU_GEMM_CASES = [
+    (PDPUConfig(P13_2, P16_2, N=4, w_m=14), (24, 16, 40), (16, 32)),
+    (PDPUConfig(P8_2, P8_2, N=4, w_m=10), (16, 8, 16), (8, 16)),
+    (PDPUConfig(P16_2, P16_2, N=8, w_m=14), (8, 16, 8), (8, 8)),
+]
+
+
+@pytest.mark.parametrize("case", PDPU_GEMM_CASES,
+                         ids=lambda c: f"{c[0].name}-{c[1]}")
+def test_pdpu_gemm_kernel_bit_exact(case, rng):
+    cfg, (M, K, N), (bm, bn) = case
+    a = jnp.asarray(rng.integers(0, 1 << cfg.fmt_in.n, (M, K)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 1 << cfg.fmt_in.n, (K, N)), jnp.int32)
+    got = np.asarray(ops.pdpu_matmul(a, b, cfg, bm=bm, bn=bn))
+    want = np.asarray(ref.pdpu_matmul_ref(a, b, cfg))
+    assert (got == want).all()
+
+
+def test_matmul_posit_weights_path(rng):
+    from repro.core import posit
+    x = jnp.asarray(rng.normal(0, 1, (16, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (64, 32)).astype(np.float32))
+    w_codes = posit.pack(w, P16_2)
+    got = ops.matmul_posit_weights(x, w_codes, P16_2)
+    want = jnp.dot(x, posit.unpack(w_codes, P16_2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

@@ -1,0 +1,158 @@
+"""PDPU fused dot-product: bit-exactness across all three implementations,
+quire equivalence, and hardware-semantics properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pdpu as pdj
+from repro.core import posit_np as pnp
+from repro.core import posit_py as ppy
+from repro.core.formats import P8_2, P13_2, P16_2, PDPUConfig, PositFormat
+
+CFGS = [
+    PDPUConfig(P16_2, P16_2, N=4, w_m=14),   # Table I row
+    PDPUConfig(P13_2, P16_2, N=4, w_m=14),   # paper's mixed headline
+    PDPUConfig(P13_2, P16_2, N=8, w_m=14),
+    PDPUConfig(P13_2, P16_2, N=8, w_m=10),
+    PDPUConfig(P8_2, P8_2, N=4, w_m=10),
+    PDPUConfig(P8_2, PositFormat(12, 2), N=2, w_m=20),
+]
+
+
+def rand_codes(rng, fmt, shape):
+    return rng.integers(0, 1 << fmt.n, size=shape)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_jax_vs_numpy_bit_exact(cfg, rng):
+    M = 500
+    va = rand_codes(rng, cfg.fmt_in, (M, cfg.N))
+    vb = rand_codes(rng, cfg.fmt_in, (M, cfg.N))
+    acc = rand_codes(rng, cfg.fmt_out, (M,))
+    out_np = pnp.pdpu_dot_np(va, vb, acc, cfg)
+    out_j = np.asarray(pdj.pdpu_dot(jnp.asarray(va), jnp.asarray(vb),
+                                    jnp.asarray(acc), cfg))
+    assert (out_np == out_j).all()
+
+
+@pytest.mark.parametrize("cfg", CFGS[:4], ids=lambda c: c.name)
+def test_numpy_vs_staged_python_model(cfg, rng):
+    M = 60
+    va = rand_codes(rng, cfg.fmt_in, (M, cfg.N))
+    vb = rand_codes(rng, cfg.fmt_in, (M, cfg.N))
+    acc = rand_codes(rng, cfg.fmt_out, (M,))
+    out = pnp.pdpu_dot_np(va, vb, acc, cfg)
+    for i in range(M):
+        ref = ppy.pdpu_dot_model(
+            [int(x) for x in va[i]], [int(x) for x in vb[i]], int(acc[i]),
+            cfg.fmt_in, cfg.fmt_out, cfg.w_m, cfg.guard_bits, cfg.sticky)
+        assert ref == out[i], i
+
+
+def test_wide_wm_equals_quire_oracle(rng):
+    cfg = PDPUConfig(P13_2, P16_2, N=4, w_m=256)
+    M = 80
+    va = rand_codes(rng, cfg.fmt_in, (M, 4))
+    vb = rand_codes(rng, cfg.fmt_in, (M, 4))
+    acc = rand_codes(rng, cfg.fmt_out, (M,))
+    out = pnp.pdpu_dot_np(va, vb, acc, cfg)
+    for i in range(M):
+        ref = ppy.quire_dot_exact(
+            [int(x) for x in va[i]], [int(x) for x in vb[i]], int(acc[i]),
+            cfg.fmt_in, cfg.fmt_out)
+        assert ref == out[i]
+
+
+def test_wm_error_monotone(rng):
+    """Wider alignment width w_m == closer to quire-exact (paper §III-C)."""
+    fmt_i, fmt_o = P13_2, P16_2
+    M, N = 800, 4
+    # values near 1.0 so alignment truncation is exercised
+    va = pnp.encode_np(rng.normal(0, 1, (M, N)), fmt_i)
+    vb = pnp.encode_np(rng.normal(0, 1, (M, N)), fmt_i)
+    acc = pnp.encode_np(rng.normal(0, 1, (M,)), fmt_o)
+    exact = pnp.decode_np(pnp.pdpu_dot_np(
+        va, vb, acc, PDPUConfig(fmt_i, fmt_o, N=N, w_m=256)), fmt_o)
+    errs = []
+    for w_m in (8, 10, 14, 20):
+        got = pnp.decode_np(pnp.pdpu_dot_np(
+            va, vb, acc, PDPUConfig(fmt_i, fmt_o, N=N, w_m=w_m)), fmt_o)
+        errs.append(np.nanmean(np.abs(got - exact)))
+    assert errs[0] >= errs[1] >= errs[2] >= errs[3]
+    assert errs[3] <= 5e-6  # w_m=20 is effectively exact at these scales
+
+
+def test_fused_fewer_roundings_than_discrete(rng):
+    """PDPU (one rounding per chunk) beats the discrete DPU (rounding per
+    op) against the exact reference — the paper's precision claim."""
+    from repro.core import discrete
+    fmt = P16_2
+    K = 32
+    a = rng.normal(0, 1, (400, K))
+    b = rng.normal(0, 1, (400, K))
+    aq = pnp.decode_np(pnp.encode_np(a, fmt), fmt)
+    bq = pnp.decode_np(pnp.encode_np(b, fmt), fmt)
+    exact = (aq * bq).sum(-1)
+    fused = discrete.dpu_pdpu_fused(a, b, PDPUConfig(fmt, fmt, N=4, w_m=20))
+    disc = discrete.dpu_discrete(a, b, 4, discrete.make_round_posit(fmt))
+    err_f = np.abs(fused - exact).mean()
+    err_d = np.abs(disc - exact).mean()
+    assert err_f < err_d
+
+
+# -- properties -------------------------------------------------------------
+
+@given(data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_zero_vb_returns_acc(data):
+    cfg = PDPUConfig(P13_2, P16_2, N=4, w_m=14)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    acc = rand_codes(rng, cfg.fmt_out, (8,))
+    acc[acc == cfg.fmt_out.nar_code] = 0
+    va = rand_codes(rng, cfg.fmt_in, (8, 4))
+    va[va == cfg.fmt_in.nar_code] = 0
+    vb = np.zeros((8, 4), np.int64)
+    out = pnp.pdpu_dot_np(va, vb, acc, cfg)
+    assert (out == acc).all()
+
+
+@given(data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_permutation_invariance(data):
+    cfg = PDPUConfig(P13_2, P16_2, N=8, w_m=14)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    va = rand_codes(rng, cfg.fmt_in, (4, 8))
+    vb = rand_codes(rng, cfg.fmt_in, (4, 8))
+    acc = rand_codes(rng, cfg.fmt_out, (4,))
+    perm = rng.permutation(8)
+    out1 = pnp.pdpu_dot_np(va, vb, acc, cfg)
+    out2 = pnp.pdpu_dot_np(va[:, perm], vb[:, perm], acc, cfg)
+    assert (out1 == out2).all()
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_nar_poisons(data):
+    cfg = PDPUConfig(P13_2, P16_2, N=4, w_m=14)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    va = rand_codes(rng, cfg.fmt_in, (4, 4))
+    vb = rand_codes(rng, cfg.fmt_in, (4, 4))
+    acc = rand_codes(rng, cfg.fmt_out, (4,))
+    va[2, 1] = cfg.fmt_in.nar_code
+    out = pnp.pdpu_dot_np(va, vb, acc, cfg)
+    assert out[2] == cfg.fmt_out.nar_code
+
+
+def test_chunked_matches_stepwise(rng):
+    cfg = PDPUConfig(P13_2, P16_2, N=4, w_m=14)
+    K = 24
+    a = rand_codes(rng, cfg.fmt_in, (16, K))
+    b = rand_codes(rng, cfg.fmt_in, (16, K))
+    chunked = pnp.pdpu_chunked_dot_np(a, b, cfg)
+    acc = np.zeros(16, np.int64)
+    for j in range(K // 4):
+        acc = pnp.pdpu_dot_np(a[:, 4*j:4*j+4], b[:, 4*j:4*j+4], acc, cfg)
+    assert (chunked == acc).all()
+    jx = np.asarray(pdj.pdpu_chunked_dot(jnp.asarray(a), jnp.asarray(b), cfg))
+    assert (jx == chunked).all()
