@@ -1,0 +1,93 @@
+"""Model-level execution-plan comparison: fake_quant vs fused vs bit_exact.
+
+The kernel benchmarks (bench_kernels.py, bench_fused_vs_discrete.py) compare
+datapaths at GEMM granularity; this one measures the *model hot path* — the
+same transformer forward under each QuantPolicy.execution plan — plus the
+storage terms the plans trade on:
+
+  latency          : wall time of the jit'd forward / decode step (CPU
+                     interpret wall time is NOT TPU performance, but the
+                     plan-to-plan ratio shows the dispatch overheads)
+  weight bytes     : checkpoint-resident weight storage (float vs packed
+                     posit codes — the HBM footprint serving reads per step)
+  kv cache bytes   : decode-state storage per slot configuration
+
+fake_quant and fused run on a smoke config; bit_exact is O(M*N*K) select
+chains (VPU-bound by design), so it runs on a micro config — the point is
+plan parity and relative cost, not absolute numbers.
+
+    PYTHONPATH=src python benchmarks/bench_exec_paths.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.quant import QuantPolicy
+from repro.core.formats import P13_2, P16_2, P8_2
+from repro.models import api
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e3  # ms
+
+
+def bench_cfg(cfg, plans, B, S, rng, reps=3):
+    rows = []
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    for plan in plans:
+        pcfg = cfg.replace(quant=cfg.quant.with_execution(plan))
+        params = api.init(jax.random.key(0), pcfg)
+        if plan == "fused":
+            params = api.pack_params(params, pcfg)
+        wbytes = api.weight_bytes(params)
+        fwd = jax.jit(lambda p, t: api.apply(p, {"tokens": t}, pcfg))
+        ms = _time(fwd, params, tokens, reps=reps)
+        cache = api.init_cache(pcfg, B, S)
+        kv_bytes = int(sum(x.nbytes for x in jax.tree.leaves(cache)))
+        rows.append((pcfg.name, plan, B, S, ms, wbytes, kv_bytes))
+    return rows
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # smoke-scale model: fake_quant (training path) vs fused (serving path)
+    smoke = configs.get_smoke("command_r_35b").replace(
+        quant=QuantPolicy(weights=P16_2, kv_cache=P8_2))
+    rows += bench_cfg(smoke, ("fake_quant", "fused"), B=2, S=64, rng=rng)
+
+    # micro model: all three plans incl. the bit-exact chunked-PDPU kernel
+    micro = smoke.replace(
+        name="command-r-35b-micro", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=1, head_dim=8, d_ff=32, vocab_size=64,
+        quant=QuantPolicy(weights=P13_2, activations=P13_2, pdpu_n=4))
+    rows += bench_cfg(micro, ("fake_quant", "fused", "bit_exact"),
+                      B=1, S=8, rng=rng, reps=1)
+
+    print("model,plan,batch,seq,forward_ms,weight_bytes,kv_cache_bytes")
+    for name, plan, B, S, ms, wb, kb in rows:
+        print(f"{name},{plan},{B},{S},{ms:.1f},{wb},{kb}")
+
+    by_plan = {r[1]: r for r in rows[:2]}
+    f32_w = by_plan["fake_quant"][5]
+    packed_w = by_plan["fused"][5]
+    checks = {
+        "packed_weights_smaller": packed_w < f32_w,
+        "all_plans_ran": len(rows) == 5,
+    }
+    print("checks:", checks)
+    assert all(checks.values()), checks
+
+
+if __name__ == "__main__":
+    main()

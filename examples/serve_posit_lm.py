@@ -1,35 +1,59 @@
-"""Serving with posit-compressed weights + KV cache (continuous batching).
+"""Serving with posit-packed weights + posit KV cache (continuous batching).
 
-The KV cache is stored as P(8,2) codes (4x smaller than f32, 2x smaller
-than bf16) and decoded exactly on read — the PDPU storage-format win
-applied to the decode-bandwidth roofline.
+End-to-end demonstration of the execution-plan architecture:
+  1. a float checkpoint's qdot weights are packed once to P(16,2) codes
+     (int16 — half the bf16 bytes, quarter the f32 bytes),
+  2. the packed tree is checkpointed with pack metadata in the manifest,
+  3. `ServingEngine.from_checkpoint` restores the codes and serves them
+     through the *fused* Pallas GEMM (in-kernel decode, wide f32 MXU
+     accumulate — the PDPU datapath on the model hot path), with the KV
+     cache stored as P(8,2) codes decoded exactly on read.
 
     PYTHONPATH=src python examples/serve_posit_lm.py
 """
+import tempfile
 import time
 
 import jax
 import numpy as np
 
 from repro import configs
+from repro.checkpoint import CheckpointManager
 from repro.core.quant import policy_by_name
 from repro.models import api
 from repro.serve import Request, ServingEngine
 
 cfg = configs.get_smoke("command_r_35b").replace(
-    quant=policy_by_name("serve_p16_kv8"))
+    quant=policy_by_name("serve_fused_p16"))
 params = api.init(jax.random.key(0), cfg)
-engine = ServingEngine(cfg, params, batch_slots=4, max_seq=96)
-rng = np.random.default_rng(0)
-for i in range(10):
-    engine.submit(Request(rid=i,
-                          prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
-                          max_new_tokens=12))
-t0 = time.perf_counter()
-done = engine.run()
-dt = time.perf_counter() - t0
+
+# one-shot pack pass: float masters -> posit code arrays (int16)
+packed = api.pack_params(params, cfg)
+f32_bytes = api.weight_bytes(params)
+packed_bytes = api.weight_bytes(packed)
+print(f"weights: {f32_bytes} B float -> {packed_bytes} B packed "
+      f"({f32_bytes / packed_bytes:.2f}x smaller)")
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    mgr = CheckpointManager(ckpt_dir)
+    mgr.save(0, packed, extra=api.pack_manifest(cfg))
+    engine = ServingEngine.from_checkpoint(cfg, ckpt_dir,
+                                           batch_slots=4, max_seq=96)
+    print(f"engine resident: {engine.weight_bytes()} B weights, "
+          f"{engine.kv_cache_bytes()} B kv cache (P(8,2) codes)")
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+            max_new_tokens=12))
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+
 tok = sum(len(r.out_tokens) for r in done)
 print(f"served {len(done)} requests / {tok} tokens in {dt:.2f}s "
-      f"({tok/dt:.1f} tok/s on CPU)")
+      f"({tok/dt:.1f} tok/s on CPU, Pallas interpret mode)")
+print(f"execution plan: {cfg.quant.execution} "
+      f"(weights {cfg.quant.weights}, kv {cfg.quant.kv_cache})")
 print(f"kv cache dtype: {engine.cache['k'].dtype} (posit P(8,2) codes)")
 print(f"sample continuation: {done[0].out_tokens}")

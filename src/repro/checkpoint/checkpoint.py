@@ -58,29 +58,35 @@ class CheckpointManager:
         self._error: Optional[BaseException] = None
 
     # ---------------- write path ----------------
-    def save(self, step: int, tree: Any, blocking: bool = True):
-        """Snapshot to host, then write (optionally in the background)."""
+    def save(self, step: int, tree: Any, blocking: bool = True,
+             extra: Optional[dict] = None):
+        """Snapshot to host, then write (optionally in the background).
+
+        `extra` is caller metadata stored verbatim in the manifest — e.g.
+        models.packing.pack_manifest(cfg) marks posit-packed weights so
+        readers (ServingEngine.from_checkpoint) pick the right dtypes.
+        """
         self.wait()  # one in-flight save at a time
         flat, _ = _flatten(tree)
         host = {k: np.asarray(v) for k, v in flat.items()}  # device->host copy
 
         if blocking:
-            self._write(step, host)
+            self._write(step, host, extra)
         else:
             self._thread = threading.Thread(
-                target=self._write_guard, args=(step, host), daemon=True)
+                target=self._write_guard, args=(step, host, extra), daemon=True)
             self._thread.start()
 
-    def save_async(self, step: int, tree: Any):
-        self.save(step, tree, blocking=False)
+    def save_async(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.save(step, tree, blocking=False, extra=extra)
 
-    def _write_guard(self, step, host):
+    def _write_guard(self, step, host, extra):
         try:
-            self._write(step, host)
+            self._write(step, host, extra)
         except BaseException as e:  # surfaced on next wait()
             self._error = e
 
-    def _write(self, step: int, host: dict):
+    def _write(self, step: int, host: dict, extra: Optional[dict] = None):
         final = os.path.join(self.dir, f"step_{step:09d}")
         if os.path.exists(os.path.join(final, "manifest.json")):
             return  # this step is already committed — idempotent save
@@ -92,6 +98,7 @@ class CheckpointManager:
             "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                        for k, v in host.items()},
             "format": 1,
+            "extra": extra or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -126,6 +133,12 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def read_manifest(self, step: int) -> dict:
+        """The committed manifest of one checkpoint (shapes/dtypes/extra)."""
+        path = os.path.join(self.dir, f"step_{step:09d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)
 
     def restore(self, step: int, like: Any, shardings: Any = None):
         """Load step onto the current mesh.

@@ -8,6 +8,20 @@ policy through the model stack: every matmul in `repro.models` consults a
 format, and the distributed optimizer uses `grad_format` for posit-compressed
 gradient all-reduce.
 
+Beyond the *formats*, the policy also selects the *execution plan* — which
+datapath actually runs each matmul (`kernels/dispatch.py`):
+
+  fake_quant : decode(encode(x)) on both operands, then a plain f32 MXU dot
+               with straight-through gradients.  The training path: exact
+               posit values, full autodiff support, weights stay float.
+  fused      : operands travel as posit *codes* (int8/int16) into the Pallas
+               fused GEMM — in-kernel decode, wide f32 accumulate, single
+               encode.  The serving fast path: weights may be stored packed
+               (see models/packing.py), halving/quartering weight HBM.
+  bit_exact  : the chunked-PDPU kernel — the paper's S1..S6 integer datapath
+               including the W_m alignment truncation.  Hardware-faithful
+               validation at small shapes; O(M*N*K) select-chains, not fast.
+
 On TPU the decode of a P(n<=16,es) code into f32 is *exact* (see
 `core/posit.py`), so the MXU matmul over decoded posits with f32 accumulation
 realizes the paper's "fused: decode once, accumulate wide, encode once"
@@ -21,8 +35,10 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from .formats import PositFormat, P16_2, P13_2, P8_2
+from .formats import PositFormat, PDPUConfig, P16_2, P13_2, P8_2
 from . import posit
+
+EXECUTION_PLANS = ("fake_quant", "fused", "bit_exact")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +50,12 @@ class QuantPolicy:
     kv_cache    : serving KV-cache storage format.
     grad_allreduce : gradient compression format for cross-replica reduce.
     accum_dtype : wide accumulation dtype — the W_m analogue on TPU.
+    execution   : which GEMM datapath runs the matmuls (see module docstring
+                  and kernels/dispatch.py): 'fake_quant' | 'fused' |
+                  'bit_exact'.  Only 'fake_quant' is differentiable; the
+                  other two are inference/validation plans.
+    pdpu_n, pdpu_w_m : chunk size and alignment width of the PDPU instance
+                  used by the 'bit_exact' plan (paper Table I knobs).
     """
 
     weights: Optional[PositFormat] = None
@@ -41,6 +63,17 @@ class QuantPolicy:
     kv_cache: Optional[PositFormat] = None
     grad_allreduce: Optional[PositFormat] = None
     accum_dtype: jnp.dtype = jnp.float32
+    execution: str = "fake_quant"
+    pdpu_n: int = 4
+    pdpu_w_m: int = 14
+
+    def __post_init__(self):
+        if self.execution not in EXECUTION_PLANS:
+            raise ValueError(
+                f"unknown execution plan '{self.execution}' (have {EXECUTION_PLANS})")
+        if self.execution != "fake_quant" and self.weights is None:
+            raise ValueError(
+                f"execution='{self.execution}' requires a posit weights format")
 
     @property
     def enabled(self) -> bool:
@@ -61,6 +94,20 @@ class QuantPolicy:
             return kv
         return posit.quantize(kv, self.kv_cache)
 
+    def with_execution(self, plan: str) -> "QuantPolicy":
+        """Same formats, different datapath — e.g. train fake_quant, then
+        serve the identical policy fused."""
+        return dataclasses.replace(self, execution=plan)
+
+    def pdpu_config(self) -> PDPUConfig:
+        """PDPU instance for the bit_exact plan: inputs in the weights
+        format, accumulator/output in the paper's wider P(16,es)."""
+        fmt_in = self.weights or self.activations
+        if fmt_in is None:
+            raise ValueError("bit_exact plan needs a posit weights/activations format")
+        fmt_out = PositFormat(max(fmt_in.n, 16), fmt_in.es)
+        return PDPUConfig(fmt_in, fmt_out, N=self.pdpu_n, w_m=self.pdpu_w_m)
+
 
 # The paper's headline mixed-precision configuration, P(13/16,2):
 # low-precision inputs, higher-precision accumulation.
@@ -69,6 +116,11 @@ PAPER_MIXED = QuantPolicy(weights=P13_2, activations=P13_2)
 UNIFORM_P16 = QuantPolicy(weights=P16_2, activations=P16_2)
 # Serving policy: posit weights + posit KV cache, float activations.
 SERVE_P16_KV8 = QuantPolicy(weights=P16_2, kv_cache=P8_2)
+# Serving fast path: packed posit weights through the fused Pallas kernel.
+SERVE_FUSED_P16 = QuantPolicy(weights=P16_2, kv_cache=P8_2, execution="fused")
+# Hardware-faithful validation: every matmul through the chunked-PDPU kernel.
+VALIDATE_BIT_EXACT = QuantPolicy(weights=P13_2, activations=P13_2,
+                                 execution="bit_exact")
 # No quantization (baseline).
 NONE = QuantPolicy()
 
@@ -79,6 +131,8 @@ def policy_by_name(name: str) -> QuantPolicy:
         "paper_mixed": PAPER_MIXED,
         "uniform_p16": UNIFORM_P16,
         "serve_p16_kv8": SERVE_P16_KV8,
+        "serve_fused_p16": SERVE_FUSED_P16,
+        "validate_bit_exact": VALIDATE_BIT_EXACT,
     }
     if name not in table:
         raise KeyError(f"unknown quant policy '{name}' (have {sorted(table)})")

@@ -5,6 +5,8 @@
                  accumulate, single encode (the PDPU's TPU-native form)
   pdpu_dot     : bit-exact chunked-PDPU GEMM (hardware-faithful W_m path)
   ops          : public jit'd wrappers (auto-interpret off-TPU)
+  dispatch     : execution-plan dispatch (fake_quant | fused | bit_exact)
+                 consulted by every model matmul via models/common.qdot
   ref          : pure-jnp oracles for the allclose/bit-identity sweeps
 """
-from . import ops, ref  # noqa: F401
+from . import dispatch, ops, ref  # noqa: F401

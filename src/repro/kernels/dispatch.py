@@ -1,0 +1,104 @@
+"""Posit GEMM execution-plan dispatch — the one place model matmuls land.
+
+`models/common.qdot` (and therefore every projection in every architecture)
+routes here; `QuantPolicy.execution` picks the datapath:
+
+  fake_quant : STE fake-quantization + plain f32 dot.  Differentiable; the
+               training default.  Weights may be float masters or packed
+               posit codes (a packed checkpoint served with this plan is
+               decoded once per use — same values, no Pallas dependency).
+  fused      : the Pallas fused GEMM (`ops.fused_matmul`): operands enter as
+               posit codes, decode on the VPU inside the kernel, accumulate
+               wide on the MXU, encode once.  With float activations
+               (policy.activations None) the serving fast path
+               `ops.matmul_posit_weights` runs instead — activations stay
+               float (an encode would add a rounding), weights decode
+               in-kernel.  Inference-only.
+  bit_exact  : the chunked-PDPU kernel (`ops.pdpu_matmul`) — the paper's
+               S1..S6 integer datapath with the W_m alignment truncation.
+               Bit-identical to a silicon PDPU array; O(M*N*K) select
+               chains, so use it for validation at small shapes.
+
+Weights arrive either as float arrays (training params) or as packed posit
+codes in int8/int16 (see `models/packing.py`); the dispatcher detects the
+container dtype, so one model implementation serves both checkpoint kinds.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.quant import QuantPolicy
+from . import ops
+
+
+def is_packed(w) -> bool:
+    """True if `w` holds posit codes in an integer storage container."""
+    return jnp.issubdtype(jnp.asarray(w).dtype, jnp.integer)
+
+
+def _as_matrix(x):
+    """[..., K] -> ([M, K], leading shape)."""
+    return x.reshape(-1, x.shape[-1]), x.shape[:-1]
+
+
+def qdot(x, w, policy: QuantPolicy, prec_dtype=jnp.float32, out_dtype=None):
+    """Policy-dispatched matmul: x [..., K] @ w [K, N] -> [..., N].
+
+    prec_dtype is the HLO output dtype of the fake_quant dot (see
+    models/common.qdot: what a TP partial-sum all-reduce ships); the fused
+    and bit_exact kernels always produce f32 before the final cast.
+    out_dtype=None returns x.dtype.
+    """
+    if w.ndim != 2:
+        raise ValueError(f"qdot weights must be 2-D [K, N], got {w.shape}")
+    if x.shape[-1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch {x.shape} x {w.shape}")
+    out_dtype = out_dtype or x.dtype
+    packed = is_packed(w)
+    if packed and policy.weights is None:
+        raise ValueError("packed posit weights need QuantPolicy.weights set")
+    plan = policy.execution
+
+    if plan == "fake_quant":
+        if packed:
+            # codes are one rounding of the float masters; decoding matches
+            # maybe_quant_weight exactly when masters were stored in x.dtype
+            # precision (bf16 compute skips the master->bf16 pre-rounding)
+            wq = posit.unpack(w, policy.weights, dtype=x.dtype)
+        else:
+            wq = policy.maybe_quant_weight(w.astype(x.dtype))
+        xq = policy.maybe_quant_act(x)
+        return jnp.dot(xq, wq, preferred_element_type=prec_dtype).astype(out_dtype)
+
+    xf, lead = _as_matrix(x)
+
+    if plan == "fused":
+        fmt_w = policy.weights
+        w_codes = w if packed else ops.encode(w.astype(jnp.float32), fmt_w)
+        if policy.activations is None:
+            out = ops.matmul_posit_weights(xf, w_codes, fmt_w)
+        else:
+            a_codes = ops.encode(xf.astype(jnp.float32), policy.activations)
+            out = ops.fused_matmul(a_codes, w_codes, policy.activations, fmt_w,
+                                   fmt_out=None)
+        return out.reshape(lead + (w.shape[-1],)).astype(out_dtype)
+
+    if plan == "bit_exact":
+        cfg = policy.pdpu_config()
+        a_codes = posit.encode(xf.astype(jnp.float32), cfg.fmt_in)
+        if packed:
+            # packed weights are in policy.weights == cfg.fmt_in by
+            # construction (pdpu_config derives fmt_in from it)
+            w_codes = w.astype(jnp.int32) & cfg.fmt_in.mask
+        else:
+            w_codes = posit.encode(w.astype(jnp.float32), cfg.fmt_in)
+        pad_k = (-xf.shape[1]) % cfg.N  # whole chunks; code 0 is exact zero
+        if pad_k:
+            a_codes = jnp.pad(a_codes, ((0, 0), (0, pad_k)))
+            w_codes = jnp.pad(w_codes, ((0, pad_k), (0, 0)))
+        out_codes = ops.pdpu_matmul(a_codes, w_codes, cfg)
+        out = posit.decode(out_codes, cfg.fmt_out)
+        return out.reshape(lead + (w.shape[-1],)).astype(out_dtype)
+
+    raise ValueError(f"unknown execution plan '{plan}'")

@@ -46,11 +46,11 @@ def pdpu_matmul(a_codes, b_codes, cfg: PDPUConfig, **kw):
 def matmul_posit_weights(x, w_codes, fmt_w: PositFormat, **kw):
     """float activations x posit-stored weights — the serving fast path.
 
-    Encodes nothing: x is quantization-free, w decodes exactly in-kernel.
-    Returns f32.  (Used by the serving stack for posit-weight checkpoints.)
+    Activations stay float (encoding them would add a rounding); the posit
+    weights decode exactly in-kernel and the dot accumulates f32.  Returns
+    f32.  (Used by the dispatch layer for posit-weight checkpoints when
+    QuantPolicy.activations is None.)
     """
-    x_codes = None  # activations stay float: encode would add rounding
-    del x_codes
     a = x.astype(jnp.float32)
-    w = posit_codec.decode(w_codes, fmt_w, interpret=_interpret())
+    w = posit_codec.decode(w_codes, fmt_w, interpret=_interpret(), **kw)
     return jnp.dot(a, w, preferred_element_type=jnp.float32)

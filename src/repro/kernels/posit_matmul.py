@@ -35,6 +35,9 @@ from repro.core.formats import PositFormat
 # MXU-aligned tile defaults (128x128 systolic array; K tiled for VMEM).
 _BM, _BN, _BK = 256, 256, 512
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _fused_matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *,
                          fmt_a: PositFormat, fmt_b: PositFormat,
@@ -110,7 +113,7 @@ def posit_matmul(a_codes, b_codes, fmt_a: PositFormat, fmt_b: PositFormat,
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

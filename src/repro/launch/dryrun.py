@@ -194,6 +194,8 @@ def analyze(lowered, compiled, cfg, shape, mesh, compile_s):
 
     n_dev = mesh.devices.size
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per partition
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_info = {

@@ -8,6 +8,12 @@ Every architecture exposes the same five entry points:
     decode_step(params, tokens, cache, cfg) -> (logits, cache')
 plus `input_specs(cfg, shape)` producing allocation-free ShapeDtypeStructs
 for the dry-run, and `cache_specs` for decode-state dry-runs.
+
+Posit-packed checkpoints (re-exported from `packing`): `pack_params` /
+`unpack_params` convert qdot weights to/from posit code arrays,
+`packed_param_specs` types the restore tree, `pack_manifest` tags the
+checkpoint.  apply/prefill/decode_step accept packed params transparently
+(the GEMM dispatch layer detects code containers).
 """
 from __future__ import annotations
 
@@ -19,6 +25,8 @@ import jax.numpy as jnp
 from . import transformer, moe, mamba, hybrid
 from .config import ModelConfig, ShapeConfig
 from .module import ParamSpec, abstract_params, init_params
+from .packing import (pack_params, unpack_params, packed_param_specs,  # noqa: F401
+                      pack_manifest, weight_bytes)
 
 
 def _mod(cfg: ModelConfig):

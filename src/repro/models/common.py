@@ -1,8 +1,11 @@
 """Shared transformer building blocks (pure JAX, posit-quant aware).
 
-Every matmul routes through `qdot`, which applies the configured posit
-QuantPolicy (paper §III-B mixed precision: low-precision posit operands,
-wide f32 accumulation — the PDPU contract) and accumulates in f32.
+Every matmul routes through `qdot`, which hands off to the posit GEMM
+dispatch layer (`kernels/dispatch.py`): the QuantPolicy's execution plan
+decides whether the dot fake-quantizes on float (training), runs the fused
+Pallas kernel over packed posit codes (serving), or runs the bit-exact
+chunked-PDPU kernel (validation).  All plans keep the PDPU contract —
+low-precision posit operands, wide f32 accumulation.
 
 Attention is a flash-style streaming softmax over KV chunks (lax.scan), so
 prefill_32k never materializes an S x S score matrix; sliding-window layers
@@ -11,6 +14,7 @@ restrict work to the diagonal band.  KV caches may be stored as posit codes
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Optional
 
@@ -19,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import posit
 from repro.core.quant import QuantPolicy
+from repro.kernels import dispatch
 from repro.parallel import sharding
 from .config import ModelConfig
 
@@ -32,18 +37,17 @@ _NEG = -2.0e38
 def qdot(x, w, policy: QuantPolicy, prec_dtype=jnp.float32):
     """Posit-quantized matmul with wide accumulation (PDPU semantics).
 
-    x: [..., K] activations; w: [K, ...] weights.  Both sides are
-    fake-quantized through their posit formats (STE for training); the
-    contraction accumulates in f32 — the fused wide-accumulator property.
+    x: [..., K] activations; w: [K, N] weights — float masters or packed
+    posit codes.  The execution plan (policy.execution) picks the datapath;
+    see kernels/dispatch.py.  Every plan accumulates wide (f32) — the fused
+    wide-accumulator property.
 
-    prec_dtype is the *HLO output dtype* of the dot: on TPU the MXU always
-    accumulates f32 internally, but when the contraction dim is TP-sharded
-    the dot output dtype is what the partial-sum all-reduce ships.  Models
-    pass the compute dtype here when cfg.tp_bf16_reduce is on.
+    prec_dtype is the *HLO output dtype* of the fake_quant dot: on TPU the
+    MXU always accumulates f32 internally, but when the contraction dim is
+    TP-sharded the dot output dtype is what the partial-sum all-reduce
+    ships.  Models pass the compute dtype here when cfg.tp_bf16_reduce is on.
     """
-    xq = policy.maybe_quant_act(x)
-    wq = policy.maybe_quant_weight(w.astype(x.dtype))
-    return jnp.dot(xq, wq, preferred_element_type=prec_dtype).astype(x.dtype)
+    return dispatch.qdot(x, w, policy, prec_dtype=prec_dtype)
 
 
 def tp_prec(cfg) -> jnp.dtype:
@@ -222,13 +226,16 @@ def embed_tokens(emb, tokens, cfg: ModelConfig):
 
 
 def logits_head(x, emb_or_head, cfg: ModelConfig, transpose: bool):
-    w = emb_or_head.astype(cfg.compute_dtype)
+    # the head historically quantizes only the weights — final hidden states
+    # reach the vocab projection unquantized regardless of the policy
+    policy = cfg.quant
+    if policy.activations is not None:
+        policy = dataclasses.replace(policy, activations=None)
+    w = emb_or_head
     if transpose:  # tied embedding [V, D] -> project with its transpose
-        out = jnp.einsum("bsd,vd->bsv", x, cfg.quant.maybe_quant_weight(w),
-                         preferred_element_type=jnp.float32)
-    else:
-        out = jnp.einsum("bsd,dv->bsv", x, cfg.quant.maybe_quant_weight(w),
-                         preferred_element_type=jnp.float32)
+        w = w.T    # lossless for packed posit codes too (pure reindexing)
+    out = dispatch.qdot(x, w, policy, prec_dtype=jnp.float32,
+                        out_dtype=jnp.float32)
     out = softcap(out, cfg.logit_softcap)
     return sharding.constrain(out, ("batch", None, "vocab"))
 

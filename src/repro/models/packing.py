@@ -1,0 +1,131 @@
+"""One-shot param packing: float checkpoints -> posit-code weight arrays.
+
+The paper's storage win — P(n<=16) weights in int8/int16 containers — only
+materializes if the *checkpoint* holds codes and the serving matmul decodes
+them in-kernel (`kernels/dispatch.py`, execution='fused').  This module is
+the conversion pass:
+
+    params_packed = pack_params(params, cfg)        # float -> codes
+    mgr.save(step, params_packed, extra=pack_manifest(cfg))
+    ...
+    engine = ServingEngine.from_checkpoint(cfg, dir, ...)   # serves codes
+
+Only weights consumed through `qdot` are packed (per family, below); other
+leaves — norms, embeddings read by jnp.take, routed-expert stacks consumed
+by grouped einsums, SSM scan params — stay float.  Packing is one rounding
+per weight (posit encode), identical to what fake_quant applies on the fly,
+so a packed model served fused computes the same quantized function.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.formats import PositFormat
+from .config import ModelConfig
+from .module import ParamSpec
+
+# weight leaves consumed via qdot, per model family (path into the params
+# pytree).  Routed MoE experts (we_*) run through grouped einsums on the
+# fake-quant path and are deliberately not packed.
+_QDOT_LAYER_WEIGHTS = {
+    "dense": ("wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wo_mlp"),
+    "encoder": ("wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wo_mlp"),
+    "vlm": ("wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wo_mlp"),
+    "moe": ("wq", "wk", "wv", "wo"),
+}
+
+
+def packable_paths(cfg: ModelConfig) -> Tuple[Tuple[str, ...], ...]:
+    """Paths (key tuples) of the weight leaves that pack to posit codes."""
+    names = _QDOT_LAYER_WEIGHTS.get(cfg.family)
+    if names is None:
+        raise NotImplementedError(
+            f"param packing not supported for family '{cfg.family}' "
+            f"(have {sorted(_QDOT_LAYER_WEIGHTS)})")
+    names = list(names)
+    if cfg.family == "moe" and cfg.n_shared_experts:
+        names += ["ws_gate", "ws_up", "ws_down"]
+    paths = [("layers", n) for n in names]
+    if not cfg.tie_embeddings:
+        paths.append(("head",))
+    return tuple(paths)
+
+
+def _get(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _set(tree, path, value):
+    for k in path[:-1]:
+        tree = tree[k]
+    tree[path[-1]] = value
+
+
+def _copy_tree(tree):
+    if isinstance(tree, dict):
+        return {k: _copy_tree(v) for k, v in tree.items()}
+    return tree
+
+
+def pack_params(params, cfg: ModelConfig, fmt: PositFormat = None):
+    """Replace every packable float weight with posit codes (int8/int16).
+
+    One rounding per weight — the same rounding fake_quant applies on every
+    forward pass, applied once at conversion time instead.
+    """
+    fmt = fmt or cfg.quant.weights
+    if fmt is None:
+        raise ValueError("pack_params needs a weights format "
+                         "(cfg.quant.weights or explicit fmt)")
+    packed = _copy_tree(params)
+    for path in packable_paths(cfg):
+        leaf = _get(params, path)
+        _set(packed, path, posit.pack(jnp.asarray(leaf, jnp.float32), fmt))
+    return packed
+
+
+def unpack_params(params, cfg: ModelConfig, fmt: PositFormat = None,
+                  dtype=jnp.float32):
+    """Inverse of pack_params: decode code leaves back to float arrays."""
+    fmt = fmt or cfg.quant.weights
+    if fmt is None:
+        raise ValueError("unpack_params needs a weights format")
+    out = _copy_tree(params)
+    for path in packable_paths(cfg):
+        leaf = _get(params, path)
+        _set(out, path, posit.unpack(leaf, fmt, dtype=dtype))
+    return out
+
+
+def packed_param_specs(cfg: ModelConfig, fmt: PositFormat = None):
+    """param_specs with packable leaves re-typed to the code storage dtype —
+    the `like` tree for restoring a packed checkpoint (checkpoint.restore)."""
+    from . import api
+
+    fmt = fmt or cfg.quant.weights
+    if fmt is None:
+        raise ValueError("packed_param_specs needs a weights format")
+    storage = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[fmt.storage_bits]
+    out = _copy_tree(api.param_specs(cfg))
+    for path in packable_paths(cfg):
+        spec = _get(out, path)
+        _set(out, path, spec._replace(dtype=storage))
+    return out
+
+
+def pack_manifest(cfg: ModelConfig, fmt: PositFormat = None) -> dict:
+    """Checkpoint `extra` metadata marking a packed-weights checkpoint."""
+    fmt = fmt or cfg.quant.weights
+    return {"packed_weights": True, "weights_format": str(fmt),
+            "weights_n": fmt.n, "weights_es": fmt.es}
+
+
+def weight_bytes(params) -> int:
+    """Total weight storage footprint (the HBM-resident bytes for weights)."""
+    return int(sum(x.nbytes for x in jax.tree.leaves(params)))

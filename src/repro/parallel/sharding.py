@@ -143,6 +143,14 @@ def _manual_axes():
             return set()
         return {name for name, t in zip(am.axis_names, am.axis_types)
                 if "Manual" in str(t)}
+    except AttributeError:
+        # older jax: no abstract-mesh introspection, but shard_map binds its
+        # axes as named axes — anything in the axis env is manual here.
+        try:
+            from jax._src import core
+            return set(core.get_axis_env().axis_sizes)
+        except Exception:
+            return set()
     except Exception:
         return set()
 

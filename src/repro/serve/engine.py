@@ -6,6 +6,12 @@ it by prefilling a queued request into that slot (cache splice).  This is
 the standard TPU serving shape (fixed shapes, no recompilation) — the KV
 cache may be posit-coded per the model's QuantPolicy, halving/quartering
 the decode memory roofline (the PDPU storage-format win).
+
+Weights may equally be posit-coded: `from_checkpoint` restores a packed
+checkpoint (models/packing.py) using the manifest's pack metadata, and the
+GEMM dispatch layer routes the packed weights through the fused Pallas
+kernel when cfg.quant.execution == 'fused' — posit codes HBM-to-MXU with
+one in-kernel decode, end to end.
 """
 from __future__ import annotations
 
@@ -53,6 +59,53 @@ class ServingEngine:
         self.next_token = np.zeros(batch_slots, np.int32)
         self.queue: List[Request] = []
         self.done: List[Request] = []
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, cfg: ModelConfig, directory: str,
+                        batch_slots: int, max_seq: int,
+                        step: Optional[int] = None, **kw) -> "ServingEngine":
+        """Restore params (float or posit-packed) and build an engine.
+
+        The checkpoint manifest's `extra` metadata (models.packing.
+        pack_manifest) decides the restore dtypes: packed checkpoints come
+        back as int8/int16 code arrays that the dispatch layer consumes
+        directly — no float materialization of the weights.
+        """
+        from repro.checkpoint import CheckpointManager
+        from repro.models import packing
+        from repro.models.module import abstract_params
+
+        mgr = CheckpointManager(directory)
+        if step is None:
+            step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {directory}")
+        extra = mgr.read_manifest(step).get("extra") or {}
+        if extra.get("packed_weights"):
+            from repro.core.formats import PositFormat
+            fmt = PositFormat(extra["weights_n"], extra["weights_es"])
+            if cfg.quant.weights != fmt:
+                # the dispatch layer decodes codes with cfg.quant.weights —
+                # a silent mismatch would serve garbage values
+                raise ValueError(
+                    f"checkpoint packed as {fmt} but cfg.quant.weights is "
+                    f"{cfg.quant.weights}; align the serving QuantPolicy "
+                    f"with the pack format")
+            specs = packing.packed_param_specs(cfg, fmt)
+        else:
+            specs = api.param_specs(cfg)
+        params = mgr.restore(step, abstract_params(specs))
+        return cls(cfg, params, batch_slots, max_seq, **kw)
+
+    def weight_bytes(self) -> int:
+        """Resident weight-storage bytes (int codes count at container width)."""
+        from repro.models.packing import weight_bytes
+        return weight_bytes(self.params)
+
+    def kv_cache_bytes(self) -> int:
+        """Allocated KV/state cache bytes for the current slot configuration."""
+        return int(sum(v.nbytes for v in jax.tree.leaves(self.cache)))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):

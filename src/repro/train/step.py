@@ -26,6 +26,22 @@ from repro.optim.optimizers import Optimizer
 from repro.parallel import sharding
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Fully-manual shard_map, tolerant of the jax API move.
+
+    New jax exposes `jax.shard_map(axis_names=..., check_vma=...)`; older
+    releases only have `jax.experimental.shard_map.shard_map`.  We always
+    go fully manual (every mesh axis): partial-manual (`auto=...`) trips
+    XLA partitioner check-failures on older jaxlibs."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, axis_names=set(mesh.axis_names),
+                  in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 class TrainState(NamedTuple):
     params: object
     opt_state: object
@@ -107,9 +123,13 @@ def make_train_step_compressed(cfg: ModelConfig, opt: Optimizer, mesh,
                                fmt=None, accum: int = 1):
     """Train step with P(8,2)-compressed gradient all-reduce over 'pod'.
 
-    Data parallel only across 'pod' (the slow axis): inside shard_map, each
-    pod computes grads on its batch shard; the cross-pod reduction ships
-    int8 posit codes with persistent error feedback carried in the state.
+    Fully-manual shard_map data parallelism: the batch is split over the
+    (pod, data) axes, gradients are pmean'd in full precision over the fast
+    in-pod 'data' axis, and the cross-pod reduction over the slow 'pod'
+    axis ships int8 posit codes with persistent error feedback carried in
+    the state.  The 'model' axis runs replicated compute inside this step
+    (tensor parallelism is an auto-SPMD concern; this path isolates the
+    compressed-collective wire format).
     """
     from jax.sharding import PartitionSpec as P
     from repro.core.formats import P8_2
@@ -126,8 +146,12 @@ def make_train_step_compressed(cfg: ModelConfig, opt: Optimizer, mesh,
         # err_tree arrives with a leading pod dim sliced to [1, ...] locally
         err_local = jax.tree.map(lambda e: e[0], err_tree)
         g, metrics = local_grads(params, batch)
+        # full-precision mean over the fast in-pod axis first ...
+        g = jax.tree.map(lambda x: jax.lax.pmean(x, "data"), g)
+        # ... then the posit-compressed reduction over the slow pod axis
         g, err_local = compress.compressed_psum(g, err_local, "pod", fmt)
-        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+        metrics = jax.tree.map(
+            lambda m: jax.lax.pmean(m, ("pod", "data")), metrics)
         updates, opt_state = opt.update(g, opt_state, params)
         params = jax.tree.map(jnp.add, params, updates)
         err_tree = jax.tree.map(lambda e: e[None], err_local)
@@ -141,16 +165,14 @@ def make_train_step_compressed(cfg: ModelConfig, opt: Optimizer, mesh,
 
     def train_step(state_and_err, batch):
         (state, err_tree) = state_and_err
-        rep = P()  # params replicated across pods in this configuration
-        pod = P("pod")
-        err_specs = jax.tree.map(lambda _: pod, state.params)
-        # manual over 'pod' only: the in-pod data/model axes stay automatic,
-        # so the model's internal sharding constraints still apply per pod.
-        params, opt_state, err_tree, step_no, metrics = jax.shard_map(
-            step, mesh=mesh, axis_names={"pod"},
-            in_specs=(rep, rep, err_specs, rep, pod),
+        rep = P()  # params/opt state replicated across every axis here
+        dp = P(("pod", "data"))
+        err_specs = jax.tree.map(lambda _: P("pod"), state.params)
+        batch_specs = jax.tree.map(lambda _: dp, batch)
+        params, opt_state, err_tree, step_no, metrics = _shard_map(
+            step, mesh,
+            in_specs=(rep, rep, err_specs, rep, batch_specs),
             out_specs=(rep, rep, err_specs, rep, rep),
-            check_vma=False,
         )(state.params, state.opt_state, err_tree, state.step, batch)
         return (TrainState(params, opt_state, step_no), err_tree), metrics
 

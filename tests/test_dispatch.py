@@ -1,0 +1,232 @@
+"""Execution-plan dispatch layer: cross-path parity (interpret mode on CPU),
+packed-weight transparency, and the pack -> checkpoint -> load -> serve
+round trip."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pdpu as pdpu_core
+from repro.core import posit
+from repro.core.formats import P8_2, P13_2, P16_2
+from repro.core.quant import QuantPolicy, policy_by_name
+from repro.kernels import dispatch
+
+
+@pytest.fixture
+def xw(rng):
+    x = jnp.asarray(rng.normal(0, 1, (3, 5, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (40, 24)).astype(np.float32))
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# plan parity
+# ---------------------------------------------------------------------------
+
+def test_fake_quant_matches_fused(xw):
+    """Both plans compute on the same decoded posit values with f32
+    accumulation — only the tiling order can differ."""
+    x, w = xw
+    policy = QuantPolicy(weights=P16_2, activations=P13_2)
+    a = dispatch.qdot(x, w, policy)
+    b = dispatch.qdot(x, w, policy.with_execution("fused"))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_packed_weights_bitwise_equal_float_weights(xw):
+    """Packing is the same single rounding the fused path applies on the
+    fly, so packed vs float weights are indistinguishable downstream."""
+    x, w = xw
+    policy = QuantPolicy(weights=P16_2, activations=P13_2, execution="fused")
+    got_f = dispatch.qdot(x, w, policy)
+    got_p = dispatch.qdot(x, posit.pack(w, P16_2), policy)
+    assert (np.asarray(got_f) == np.asarray(got_p)).all()
+
+
+def test_fused_float_activations_fast_path(xw):
+    """activations=None: float x times in-kernel-decoded posit weights."""
+    x, w = xw
+    policy = QuantPolicy(weights=P16_2, execution="fused")
+    w_codes = posit.pack(w, P16_2)
+    got = dispatch.qdot(x, w_codes, policy)
+    want = jnp.dot(x, posit.unpack(w_codes, P16_2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_fake_quant_accepts_packed_weights(xw):
+    """A packed checkpoint served with the default plan decodes once and
+    matches on-the-fly fake quantization of float masters exactly."""
+    x, w = xw
+    policy = QuantPolicy(weights=P16_2)
+    got = dispatch.qdot(x, posit.pack(w, P16_2), policy)
+    want = dispatch.qdot(x, w, policy)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_bit_exact_matches_pdpu_matmul_exact(rng):
+    """Dispatch bit_exact == the chunked-PDPU oracle, code for code."""
+    x = jnp.asarray(rng.normal(0, 1, (4, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.3, (8, 6)).astype(np.float32))
+    policy = QuantPolicy(weights=P13_2, activations=P13_2,
+                         execution="bit_exact", pdpu_n=4)
+    got = dispatch.qdot(x, w, policy, out_dtype=jnp.float32)
+    cfg = policy.pdpu_config()
+    want_codes = pdpu_core.pdpu_matmul_exact(
+        posit.encode(x, cfg.fmt_in), posit.encode(w, cfg.fmt_in), cfg)
+    want = posit.decode(want_codes, cfg.fmt_out)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_bit_exact_pads_ragged_contraction(rng):
+    """K not divisible by the chunk size N pads with exact posit zeros."""
+    x = jnp.asarray(rng.normal(0, 1, (2, 10)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.3, (10, 3)).astype(np.float32))
+    policy = QuantPolicy(weights=P13_2, activations=P13_2,
+                         execution="bit_exact", pdpu_n=4)
+    got = dispatch.qdot(x, w, policy, out_dtype=jnp.float32)
+    cfg = policy.pdpu_config()
+    a = jnp.pad(posit.encode(x, cfg.fmt_in), ((0, 0), (0, 2)))
+    b = jnp.pad(posit.encode(w, cfg.fmt_in), ((0, 2), (0, 0)))
+    want = posit.decode(pdpu_core.pdpu_matmul_exact(a, b, cfg), cfg.fmt_out)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_execution_plan_validation():
+    with pytest.raises(ValueError):
+        QuantPolicy(execution="warp_speed")
+    with pytest.raises(ValueError):
+        QuantPolicy(execution="fused")  # no weights format
+    with pytest.raises(ValueError):
+        # packed codes under a policy without a weights format
+        dispatch.qdot(jnp.ones((2, 4)), jnp.zeros((4, 3), jnp.int16),
+                      QuantPolicy())
+
+
+# ---------------------------------------------------------------------------
+# model-level parity + pack -> checkpoint -> load -> serve round trip
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(quant):
+    from repro import configs
+    return configs.get_smoke("command_r_35b").replace(
+        n_layers=1, d_model=16, n_heads=2, n_kv_heads=1, head_dim=8,
+        d_ff=32, vocab_size=64, quant=quant)
+
+
+def test_model_fake_vs_fused_logits_parity(rng):
+    """Whole-model forward: fused over packed codes ~= fake_quant on float
+    masters (same quantized function; only reduction order differs)."""
+    from repro.models import api
+
+    cfg_fake = _tiny_cfg(QuantPolicy(weights=P16_2))
+    cfg_fused = _tiny_cfg(QuantPolicy(weights=P16_2, execution="fused"))
+    params = api.init(jax.random.key(1), cfg_fake)
+    packed = api.pack_params(params, cfg_fused)
+    tokens = jnp.asarray(rng.integers(0, 64, (2, 6)), jnp.int32)
+    logits_fake = api.apply(params, {"tokens": tokens}, cfg_fake)
+    logits_fused = api.apply(packed, {"tokens": tokens}, cfg_fused)
+    np.testing.assert_allclose(np.asarray(logits_fake),
+                               np.asarray(logits_fused),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_pack_checkpoint_load_serve_roundtrip(rng, tmp_path):
+    """pack_params -> CheckpointManager.save(extra=pack_manifest) ->
+    ServingEngine.from_checkpoint -> fused continuous batching on CPU."""
+    from repro import configs
+    from repro.checkpoint import CheckpointManager
+    from repro.models import api
+    from repro.serve import Request, ServingEngine
+
+    cfg = configs.get_smoke("command_r_35b").replace(
+        quant=policy_by_name("serve_fused_p16"))
+    params = api.init(jax.random.key(0), cfg)
+    packed = api.pack_params(params, cfg)
+    assert api.weight_bytes(packed) < api.weight_bytes(params)
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, packed, extra=api.pack_manifest(cfg))
+    assert mgr.read_manifest(3)["extra"]["packed_weights"] is True
+
+    engine = ServingEngine.from_checkpoint(cfg, str(tmp_path),
+                                           batch_slots=2, max_seq=32)
+    # the restored tree is the packed tree, bit for bit
+    for a, b in zip(jax.tree.leaves(engine.params), jax.tree.leaves(packed)):
+        assert a.dtype == b.dtype
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert engine.weight_bytes() == api.weight_bytes(packed)
+
+    for i in range(3):
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+            max_new_tokens=3))
+    done = engine.run()
+    assert len(done) == 3
+    for req in done:
+        assert len(req.out_tokens) == 3
+        assert all(0 <= t < cfg.vocab_size for t in req.out_tokens)
+    # serving state really is posit-coded
+    assert engine.cache["k"].dtype == jnp.int8
+    assert engine.params["layers"]["wq"].dtype == jnp.int16
+
+
+def test_from_checkpoint_rejects_format_mismatch(tmp_path):
+    """A checkpoint packed in one format must not silently decode with a
+    different serving policy."""
+    from repro import configs
+    from repro.checkpoint import CheckpointManager
+    from repro.models import api
+    from repro.serve import ServingEngine
+
+    cfg8 = configs.get_smoke("command_r_35b").replace(
+        quant=QuantPolicy(weights=P8_2, execution="fused"))
+    params = api.init(jax.random.key(0), cfg8)
+    CheckpointManager(str(tmp_path)).save(
+        0, api.pack_params(params, cfg8), extra=api.pack_manifest(cfg8))
+    cfg16 = cfg8.replace(quant=QuantPolicy(weights=P16_2, execution="fused"))
+    with pytest.raises(ValueError, match="packed as"):
+        ServingEngine.from_checkpoint(cfg16, str(tmp_path),
+                                      batch_slots=1, max_seq=16)
+
+
+def test_packed_serve_matches_in_memory_packed(rng, tmp_path):
+    """from_checkpoint serving == serving the in-memory packed tree."""
+    from repro import configs
+    from repro.checkpoint import CheckpointManager
+    from repro.models import api
+    from repro.serve import Request, ServingEngine
+
+    cfg = _tiny_cfg(policy_by_name("serve_fused_p16"))
+    params = api.init(jax.random.key(2), cfg)
+    packed = api.pack_params(params, cfg)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, packed, extra=api.pack_manifest(cfg))
+
+    prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+               for _ in range(2)]
+
+    def run(engine):
+        for i, p in enumerate(prompts):
+            engine.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        return {r.rid: r.out_tokens for r in engine.run()}
+
+    out_mem = run(ServingEngine(cfg, packed, batch_slots=2, max_seq=24))
+    out_ckpt = run(ServingEngine.from_checkpoint(cfg, str(tmp_path),
+                                                 batch_slots=2, max_seq=24))
+    assert out_mem == out_ckpt
+
+
+def test_unpack_params_inverts_to_quantized_masters(rng):
+    """unpack(pack(w)) == quantize(w): the packed checkpoint holds exactly
+    the quantized weights, no second rounding."""
+    from repro.models import api
+
+    cfg = _tiny_cfg(QuantPolicy(weights=P16_2))
+    params = api.init(jax.random.key(3), cfg)
+    restored = api.unpack_params(api.pack_params(params, cfg), cfg)
+    w = params["layers"]["wq"]
+    want = posit.quantize(jnp.asarray(w, jnp.float32), P16_2)
+    assert (np.asarray(restored["layers"]["wq"]) == np.asarray(want)).all()

@@ -6,6 +6,8 @@ must agree everywhere; the JAX codec is the one the kernels lower.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import posit as pj
