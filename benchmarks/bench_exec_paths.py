@@ -20,24 +20,18 @@ plan parity and relative cost, not absolute numbers.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from benchmarks.timing import time_ms
+except ImportError:  # bare-script run: benchmarks/ itself is sys.path[0]
+    from timing import time_ms
 from repro import configs
 from repro.core.quant import QuantPolicy
 from repro.core.formats import P13_2, P16_2, P8_2
 from repro.models import api
-
-
-def _time(fn, *args, reps: int = 3) -> float:
-    jax.block_until_ready(fn(*args))  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e3  # ms
 
 
 def bench_cfg(cfg, plans, B, S, rng, reps=3):
@@ -50,7 +44,7 @@ def bench_cfg(cfg, plans, B, S, rng, reps=3):
             params = api.pack_params(params, pcfg)
         wbytes = api.weight_bytes(params)
         fwd = jax.jit(lambda p, t: api.apply(p, {"tokens": t}, pcfg))
-        ms = _time(fwd, params, tokens, reps=reps)
+        ms = time_ms(fwd, params, tokens, reps=reps)
         cache = api.init_cache(pcfg, B, S)
         kv_bytes = int(sum(x.nbytes for x in jax.tree.leaves(cache)))
         rows.append((pcfg.name, plan, B, S, ms, wbytes, kv_bytes))

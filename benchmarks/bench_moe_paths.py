@@ -1,0 +1,99 @@
+"""MoE grouped execution-plan comparison: the routed-expert hot path.
+
+bench_exec_paths.py measures dense-model plans; this one measures what MoE
+serving is dominated by — the grouped expert einsums — under each
+QuantPolicy.execution plan and both dispatch flavors:
+
+  latency              : wall time of the jit'd forward (CPU interpret wall
+                         time is NOT TPU performance; the plan-to-plan ratio
+                         shows dispatch overheads)
+  expert weight bytes  : storage of the we_* stacks alone — the EP-sharded
+                         HBM term the grouped fused path shrinks (int8/int16
+                         codes vs f32 masters)
+  total weight bytes   : whole-checkpoint footprint
+
+Plans: fake_quant on float masters (train), fused over packed expert codes
+(serve), bit_exact chunked-PDPU per expert on a micro config (validation).
+
+    PYTHONPATH=src python benchmarks/bench_moe_paths.py
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.timing import time_ms
+except ImportError:  # bare-script run: benchmarks/ itself is sys.path[0]
+    from timing import time_ms
+from repro import configs
+from repro.core.formats import P13_2, P16_2, P8_2
+from repro.core.quant import QuantPolicy
+from repro.models import api, packing
+
+
+def expert_bytes(params) -> int:
+    """Storage of the routed expert stacks (the EP-sharded weight term)."""
+    layers = params.get("layers") or params.get("blocks", {}).get("moe", {})
+    return int(sum(np.asarray(layers[n]).nbytes
+                   for n in ("we_gate", "we_up", "we_down") if n in layers))
+
+
+def bench_cfg(cfg, plans, B, S, rng, reps=3):
+    rows = []
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    for plan in plans:
+        pcfg = cfg.replace(quant=cfg.quant.with_execution(plan))
+        params = api.init(jax.random.key(0), pcfg)
+        if plan == "fused":
+            params = api.pack_params(params, pcfg)
+        dispatch = "gshard" if pcfg.moe_grouped_dispatch else "sorted"
+        fwd = jax.jit(lambda p, t: api.apply(p, {"tokens": t}, pcfg))
+        ms = time_ms(fwd, params, tokens, reps=reps)
+        rows.append((pcfg.name, plan, dispatch, B, S, ms,
+                     expert_bytes(params), api.weight_bytes(params)))
+    return rows
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # smoke-scale MoE: train plan (float masters) vs serve plan (packed
+    # expert codes through the grouped fused kernel), both dispatch flavors
+    smoke = configs.get_smoke("qwen3_moe_235b").replace(
+        quant=QuantPolicy(weights=P16_2, kv_cache=P8_2))
+    rows += bench_cfg(smoke, ("fake_quant", "fused"), B=2, S=32, rng=rng)
+    rows += bench_cfg(smoke.replace(moe_grouped_dispatch=True),
+                      ("fake_quant", "fused"), B=2, S=32, rng=rng)
+
+    # micro MoE: all three plans incl. per-expert chunked-PDPU validation
+    micro = smoke.replace(
+        name="qwen3-moe-micro", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=1, head_dim=8, vocab_size=64, n_experts=4, top_k=2,
+        moe_d_ff=8,
+        quant=QuantPolicy(weights=P13_2, activations=P13_2, pdpu_n=4))
+    rows += bench_cfg(micro, ("fake_quant", "fused", "bit_exact"),
+                      B=1, S=8, rng=rng, reps=1)
+
+    print("model,plan,dispatch,batch,seq,forward_ms,"
+          "expert_weight_bytes,total_weight_bytes")
+    for name, plan, disp, B, S, ms, eb, wb in rows:
+        print(f"{name},{plan},{disp},{B},{S},{ms:.1f},{eb},{wb}")
+
+    by_plan = {r[1]: r for r in rows[:2]}
+    f32_experts = by_plan["fake_quant"][6]
+    packed_experts = by_plan["fused"][6]
+    checks = {
+        # int16 codes vs f32 masters: exactly half the expert storage
+        "packed_experts_half": packed_experts * 2 == f32_experts,
+        "packed_total_smaller": by_plan["fused"][7] < by_plan["fake_quant"][7],
+        "all_plans_ran": len(rows) == 7,
+    }
+    print("checks:", checks)
+    assert all(checks.values()), checks
+
+
+if __name__ == "__main__":
+    main()

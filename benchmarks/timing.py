@@ -1,0 +1,15 @@
+"""Shared wall-clock helper for the model-level benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_ms(fn, *args, reps: int = 3) -> float:
+    """Wall time of fn(*args) in ms, after one warm-up (compile) call."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e3

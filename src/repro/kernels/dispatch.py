@@ -22,6 +22,21 @@ routes here; `QuantPolicy.execution` picks the datapath:
 Weights arrive either as float arrays (training params) or as packed posit
 codes in int8/int16 (see `models/packing.py`); the dispatcher detects the
 container dtype, so one model implementation serves both checkpoint kinds.
+
+Two entry points share the plan table:
+
+  qdot         : x [..., K] @ w [K, N] — every dense projection.
+  qdot_grouped : stacked expert weights w [E, K, N] against per-expert
+                 activation slabs x [E, C, K] (sort-based dispatch buffers)
+                 or [B, E, Cg, K] (GShard grouped dispatch; the batch dim
+                 folds onto the per-expert row dim for the kernel and folds
+                 back after).  The fused plan runs the batched Pallas kernel
+                 (`ops.fused_matmul_grouped` / `matmul_posit_weights_grouped`)
+                 with a leading expert grid dimension — per-expert f32
+                 scratch accumulate, single encode — so EP serving reads
+                 expert stacks as int8/int16 codes straight from HBM.  The
+                 bit_exact plan validates expert-by-expert against the
+                 chunked-PDPU datapath.
 """
 from __future__ import annotations
 
@@ -102,3 +117,78 @@ def qdot(x, w, policy: QuantPolicy, prec_dtype=jnp.float32, out_dtype=None):
         return out.reshape(lead + (w.shape[-1],)).astype(out_dtype)
 
     raise ValueError(f"unknown execution plan '{plan}'")
+
+
+def qdot_grouped(x, w, policy: QuantPolicy, prec_dtype=jnp.float32,
+                 out_dtype=None):
+    """Policy-dispatched grouped matmul over stacked expert weights.
+
+    x: [E, C, K] or [B, E, Cg, K] activations; w: [E, K, N] stacked weights
+    (float masters or packed posit codes) -> [E, C, N] / [B, E, Cg, N].
+    Plan semantics match `qdot` exactly, applied per expert; the fused plan
+    runs the batched Pallas kernel with a leading expert grid dimension.
+    """
+    if w.ndim != 3:
+        raise ValueError(f"qdot_grouped weights must be 3-D [E, K, N], "
+                         f"got {w.shape}")
+    if x.ndim not in (3, 4):
+        raise ValueError(f"qdot_grouped activations must be [E, C, K] or "
+                         f"[B, E, Cg, K], got {x.shape}")
+    E, K, N = w.shape
+    if x.shape[-3] != E or x.shape[-1] != K:
+        raise ValueError(f"grouped contraction mismatch {x.shape} x {w.shape}")
+    out_dtype = out_dtype or x.dtype
+    packed = is_packed(w)
+    if packed and policy.weights is None:
+        raise ValueError("packed posit weights need QuantPolicy.weights set")
+    plan = policy.execution
+
+    if plan == "fake_quant":
+        if packed:
+            wq = posit.unpack(w, policy.weights, dtype=x.dtype)
+        else:
+            wq = policy.maybe_quant_weight(w.astype(x.dtype))
+        xq = policy.maybe_quant_act(x)
+        eq = "ecd,edf->ecf" if x.ndim == 3 else "becd,edf->becf"
+        return jnp.einsum(eq, xq, wq,
+                          preferred_element_type=prec_dtype).astype(out_dtype)
+
+    # fold a leading batch dim onto the per-expert row dim: the kernel sees
+    # one [E, rows, K] slab; rows unfold after
+    batched = x.ndim == 4
+    if batched:
+        B, _, C, _ = x.shape
+        xe = jnp.moveaxis(x, 0, 1).reshape(E, B * C, K)
+    else:
+        xe = x
+
+    if plan == "fused":
+        fmt_w = policy.weights
+        w_codes = w if packed else ops.encode(w.astype(jnp.float32), fmt_w)
+        if policy.activations is None:
+            out = ops.matmul_posit_weights_grouped(xe, w_codes, fmt_w)
+        else:
+            a_codes = ops.encode(xe.astype(jnp.float32), policy.activations)
+            out = ops.fused_matmul_grouped(a_codes, w_codes,
+                                           policy.activations, fmt_w,
+                                           fmt_out=None)
+    elif plan == "bit_exact":
+        cfg = policy.pdpu_config()
+        a_codes = posit.encode(xe.astype(jnp.float32), cfg.fmt_in)
+        if packed:
+            w_codes = w.astype(jnp.int32) & cfg.fmt_in.mask
+        else:
+            w_codes = posit.encode(w.astype(jnp.float32), cfg.fmt_in)
+        pad_k = (-K) % cfg.N  # whole chunks; code 0 is exact zero
+        if pad_k:
+            a_codes = jnp.pad(a_codes, ((0, 0), (0, 0), (0, pad_k)))
+            w_codes = jnp.pad(w_codes, ((0, 0), (0, pad_k), (0, 0)))
+        out_codes = jnp.stack([  # validation plan: unrolled per expert
+            ops.pdpu_matmul(a_codes[e], w_codes[e], cfg) for e in range(E)])
+        out = posit.decode(out_codes, cfg.fmt_out)
+    else:
+        raise ValueError(f"unknown execution plan '{plan}'")
+
+    if batched:
+        out = jnp.moveaxis(out.reshape(E, B, C, N), 1, 0)
+    return out.astype(out_dtype)

@@ -37,6 +37,31 @@ def fused_matmul(a_codes, b_codes, fmt_a: PositFormat, fmt_b: PositFormat,
         interpret=_interpret(), **kw)
 
 
+def fused_matmul_grouped(a_codes, b_codes, fmt_a: PositFormat,
+                         fmt_b: PositFormat,
+                         fmt_out: PositFormat | None = None, **kw):
+    """Grouped fused posit GEMM: [E,M,K] x [E,K,N] codes -> [E,M,N].
+
+    One expert per leading grid dimension; per-expert in-kernel decode,
+    f32 MXU accumulate, single encode (fmt_out=None returns f32)."""
+    return posit_matmul.posit_matmul_grouped(
+        a_codes, b_codes, fmt_a, fmt_b, fmt_out,
+        interpret=_interpret(), **kw)
+
+
+def matmul_posit_weights_grouped(x, w_codes, fmt_w: PositFormat, **kw):
+    """Float activations x stacked posit weights — grouped serving fast path.
+
+    x: [E, M, K] float; w_codes: [E, K, N] posit codes.  Activations stay
+    float (an encode would add a rounding); the expert weight stacks travel
+    HBM->VMEM as int8/int16 codes and decode on the VPU inside the grouped
+    kernel.  Returns f32.
+    """
+    return posit_matmul.posit_matmul_grouped(
+        x.astype(jnp.float32), w_codes, None, fmt_w, None,
+        interpret=_interpret(), **kw)
+
+
 def pdpu_matmul(a_codes, b_codes, cfg: PDPUConfig, **kw):
     """Bit-exact chunked-PDPU GEMM (hardware-faithful W_m datapath)."""
     return pdpu_dot.pdpu_matmul(a_codes, b_codes, cfg,

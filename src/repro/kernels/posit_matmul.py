@@ -62,6 +62,102 @@ def _fused_matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *,
             out_ref[...] = posit.encode(acc, fmt_out).astype(out_dtype)
 
 
+def _grouped_matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *,
+                           fmt_a, fmt_b: PositFormat,
+                           fmt_out, n_k: int, out_dtype):
+    """One (expert, m, n, k) grid cell of the grouped GEMM.
+
+    Identical datapath to `_fused_matmul_kernel`; the leading block dim of
+    every ref is the expert (always block size 1).  fmt_a=None means the
+    activations arrive as plain f32 (the serving fast path — encoding float
+    activations would add a rounding) and skip the in-kernel decode.
+    """
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if fmt_a is None:
+        a = a_ref[0].astype(jnp.float32)
+    else:
+        a = posit.decode(a_ref[0].astype(jnp.int32) & fmt_a.mask, fmt_a)
+    b = posit.decode(b_ref[0].astype(jnp.int32) & fmt_b.mask, fmt_b)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == n_k - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        if fmt_out is None:
+            out_ref[0] = acc.astype(out_dtype)
+        else:
+            out_ref[0] = posit.encode(acc, fmt_out).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt_a", "fmt_b", "fmt_out", "bm", "bn", "bk", "interpret"),
+)
+def posit_matmul_grouped(a, b_codes, fmt_a: PositFormat | None,
+                         fmt_b: PositFormat, fmt_out: PositFormat | None = None,
+                         bm=_BM, bn=_BN, bk=_BK, interpret=False):
+    """Grouped fused GEMM: [E,M,K] x [E,K,N] -> [E,M,N], one expert per
+    leading grid dimension.
+
+    The MoE expert-stack shape: E stacked weight matrices, each multiplied
+    by its own activation slab.  Each expert reuses the 2-D kernel's tiling
+    (bm, bn, bk) with a per-expert f32 VMEM scratch accumulator and a single
+    encode on the last K step — the PDPU fused property held per expert.
+
+    fmt_a=None takes `a` as float activations (no decode — the serving fast
+    path, where weights are stored as posit codes and decode in-kernel but
+    activations stay float); otherwise `a` holds fmt_a posit codes.
+    M/N/K pad to tile multiples internally (posit code 0 and f32 0.0 are
+    both exact zeros, so padding never perturbs the accumulation).
+    """
+    E, M, K = a.shape
+    Eb, K2, N = b_codes.shape
+    if E != Eb or K != K2:
+        raise ValueError(f"grouped mismatch {a.shape} x {b_codes.shape}")
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+
+    def pad(x, m0, m1):
+        p0 = (-x.shape[1]) % m0
+        p1 = (-x.shape[2]) % m1
+        if p0 or p1:
+            x = jnp.pad(x, ((0, 0), (0, p0), (0, p1)))
+        return x
+
+    a_p = pad(a, bm_, bk_)
+    b_p = pad(b_codes, bk_, bn_)
+    _, Mp, Kp = a_p.shape
+    _, _, Np = b_p.shape
+    n_k = Kp // bk_
+
+    if fmt_out is None:
+        out_dtype = jnp.float32
+    else:
+        out_dtype = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[fmt_out.storage_bits]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _grouped_matmul_kernel, fmt_a=fmt_a, fmt_b=fmt_b,
+            fmt_out=fmt_out, n_k=n_k, out_dtype=out_dtype,
+        ),
+        grid=(E, Mp // bm_, Np // bn_, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk_, bn_), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:, :M, :N]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("fmt_a", "fmt_b", "fmt_out", "bm", "bn", "bk", "interpret"),

@@ -50,6 +50,19 @@ def qdot(x, w, policy: QuantPolicy, prec_dtype=jnp.float32):
     return dispatch.qdot(x, w, policy, prec_dtype=prec_dtype)
 
 
+def qdot_grouped(x, w, policy: QuantPolicy, prec_dtype=jnp.float32,
+                 out_dtype=None):
+    """Grouped qdot over stacked expert weights (MoE expert einsums).
+
+    x: [E, C, K] or [B, E, Cg, K]; w: [E, K, N] — float masters or packed
+    posit codes.  Same plan semantics as `qdot`, per expert; the fused plan
+    runs the batched Pallas kernel so EP serving reads expert stacks as
+    int8/int16 codes.  See kernels/dispatch.qdot_grouped.
+    """
+    return dispatch.qdot_grouped(x, w, policy, prec_dtype=prec_dtype,
+                                 out_dtype=out_dtype)
+
+
 def tp_prec(cfg) -> jnp.dtype:
     """Output dtype for TP-contracted projections (see qdot)."""
     return cfg.compute_dtype if cfg.tp_bf16_reduce else jnp.float32

@@ -6,6 +6,11 @@ the scheme production JAX MoE stacks use): token->expert choices are sorted
 by expert id, ranked within expert, scattered into an [E, C, D] buffer that
 is *expert-sharded over the model axis* (EP) — XLA SPMD materializes the
 all-to-alls.  Attention/embedding blocks reuse `transformer`.
+
+Every expert einsum (we_gate / we_up / we_down, both dispatch flavors)
+routes through `common.qdot_grouped` -> `kernels/dispatch.qdot_grouped`:
+fake_quant for training, the batched Pallas fused kernel over packed posit
+expert stacks for serving, chunked-PDPU per expert for validation.
 """
 from __future__ import annotations
 
@@ -80,18 +85,16 @@ def moe_ffn(p, x, cfg: ModelConfig):
                              ("experts", cap_axis, "embed_act"))
 
     # --- expert computation (EP over the model axis) -----------------------
+    # the grouped GEMM dispatch: stacked [E, D, F] expert weights (float
+    # masters or packed posit codes) against the [E, C, D] dispatch buffer
     wq = cfg.quant
-    g = jnp.einsum("ecd,edf->ecf", wq.maybe_quant_act(buf),
-                   wq.maybe_quant_weight(p["we_gate"].astype(x.dtype)),
-                   preferred_element_type=jnp.float32)
-    u = jnp.einsum("ecd,edf->ecf", wq.maybe_quant_act(buf),
-                   wq.maybe_quant_weight(p["we_up"].astype(x.dtype)),
-                   preferred_element_type=jnp.float32)
+    g = common.qdot_grouped(buf, p["we_gate"], wq, out_dtype=jnp.float32)
+    u = common.qdot_grouped(buf, p["we_up"], wq, out_dtype=jnp.float32)
     h = (jax.nn.silu(g) * u).astype(x.dtype)
     h = sharding.constrain(h, ("experts", cap_axis, "expert_mlp"))
-    out_e = jnp.einsum("ecf,efd->ecd", wq.maybe_quant_act(h),
-                       wq.maybe_quant_weight(p["we_down"].astype(x.dtype)),
-                       preferred_element_type=common.tp_prec(cfg)).astype(x.dtype)
+    out_e = common.qdot_grouped(h, p["we_down"], wq,
+                                prec_dtype=common.tp_prec(cfg),
+                                out_dtype=x.dtype)
     out_e = out_e.reshape(E * C, D)
 
     # --- combine ------------------------------------------------------------
@@ -157,18 +160,16 @@ def moe_ffn_grouped(p, x, cfg: ModelConfig):
     buf = sharding.constrain(buf, ("batch", None, None, "embed_act"))
     buf = sharding.constrain(buf, ("batch", "experts", None, "embed_act"))
 
+    # grouped GEMM dispatch over the batched [B, E, Cg, D] buffer — the
+    # batch dim folds onto the per-expert rows inside qdot_grouped
     wq = cfg.quant
-    g = jnp.einsum("becd,edf->becf", wq.maybe_quant_act(buf),
-                   wq.maybe_quant_weight(p["we_gate"].astype(x.dtype)),
-                   preferred_element_type=jnp.float32)
-    u = jnp.einsum("becd,edf->becf", wq.maybe_quant_act(buf),
-                   wq.maybe_quant_weight(p["we_up"].astype(x.dtype)),
-                   preferred_element_type=jnp.float32)
+    g = common.qdot_grouped(buf, p["we_gate"], wq, out_dtype=jnp.float32)
+    u = common.qdot_grouped(buf, p["we_up"], wq, out_dtype=jnp.float32)
     h = (jax.nn.silu(g) * u).astype(x.dtype)
     h = sharding.constrain(h, ("batch", "experts", None, "expert_mlp"))
-    out_e = jnp.einsum("becf,efd->becd", wq.maybe_quant_act(h),
-                       wq.maybe_quant_weight(p["we_down"].astype(x.dtype)),
-                       preferred_element_type=common.tp_prec(cfg)).astype(x.dtype)
+    out_e = common.qdot_grouped(h, p["we_down"], wq,
+                                prec_dtype=common.tp_prec(cfg),
+                                out_dtype=x.dtype)
     out_e = sharding.constrain(out_e, ("batch", "experts", None, "embed_act"))
 
     def combine_group(out_g, slot_g, tok_g, keep_g, order_g, vals_g):

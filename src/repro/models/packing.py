@@ -10,11 +10,13 @@ the conversion pass:
     ...
     engine = ServingEngine.from_checkpoint(cfg, dir, ...)   # serves codes
 
-Only weights consumed through `qdot` are packed (per family, below); other
-leaves — norms, embeddings read by jnp.take, routed-expert stacks consumed
-by grouped einsums, SSM scan params — stay float.  Packing is one rounding
-per weight (posit encode), identical to what fake_quant applies on the fly,
-so a packed model served fused computes the same quantized function.
+Only weights consumed through the GEMM dispatch layer are packed (per
+family, below) — dense projections via `qdot`, routed MoE expert stacks
+(we_*) via `qdot_grouped`, SSM in/out projections via `qdot`.  Other leaves
+— norms, embeddings read by jnp.take, routers, conv taps, SSM scan params —
+stay float.  Packing is one rounding per weight (posit encode), identical
+to what fake_quant applies on the fly, so a packed model served fused
+computes the same quantized function.
 """
 from __future__ import annotations
 
@@ -28,28 +30,38 @@ from repro.core.formats import PositFormat
 from .config import ModelConfig
 from .module import ParamSpec
 
-# weight leaves consumed via qdot, per model family (path into the params
-# pytree).  Routed MoE experts (we_*) run through grouped einsums on the
-# fake-quant path and are deliberately not packed.
-_QDOT_LAYER_WEIGHTS = {
-    "dense": ("wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wo_mlp"),
-    "encoder": ("wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wo_mlp"),
-    "vlm": ("wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wo_mlp"),
-    "moe": ("wq", "wk", "wv", "wo"),
-}
+# weight-leaf names consumed via the GEMM dispatch layer, by sub-family.
+_ATTN_NAMES = ("wq", "wk", "wv", "wo")
+_MLP_NAMES = ("wi_gate", "wi_up", "wo_mlp")
+_EXPERT_NAMES = ("we_gate", "we_up", "we_down")   # stacked: qdot_grouped
+_SHARED_EXPERT_NAMES = ("ws_gate", "ws_up", "ws_down")
+_SSM_NAMES = ("in_proj", "out_proj")
+
+_SUPPORTED_FAMILIES = ("dense", "encoder", "vlm", "moe", "ssm", "hybrid")
 
 
 def packable_paths(cfg: ModelConfig) -> Tuple[Tuple[str, ...], ...]:
     """Paths (key tuples) of the weight leaves that pack to posit codes."""
-    names = _QDOT_LAYER_WEIGHTS.get(cfg.family)
-    if names is None:
+    fam = cfg.family
+    if fam in ("dense", "encoder", "vlm"):
+        paths = [("layers", n) for n in _ATTN_NAMES + _MLP_NAMES]
+    elif fam == "moe":
+        names = _ATTN_NAMES + _EXPERT_NAMES
+        if cfg.n_shared_experts:
+            names += _SHARED_EXPERT_NAMES
+        paths = [("layers", n) for n in names]
+    elif fam == "ssm":
+        paths = [("layers", n) for n in _SSM_NAMES]
+    elif fam == "hybrid":
+        # jamba-style blocks: attention + mamba + dense-FFN + MoE sub-trees
+        paths = [("blocks", "attn", n) for n in _ATTN_NAMES]
+        paths += [("blocks", "mamba", n) for n in _SSM_NAMES]
+        paths += [("blocks", "ffn", n) for n in _MLP_NAMES]
+        paths += [("blocks", "moe", n) for n in _EXPERT_NAMES]
+    else:
         raise NotImplementedError(
-            f"param packing not supported for family '{cfg.family}' "
-            f"(have {sorted(_QDOT_LAYER_WEIGHTS)})")
-    names = list(names)
-    if cfg.family == "moe" and cfg.n_shared_experts:
-        names += ["ws_gate", "ws_up", "ws_down"]
-    paths = [("layers", n) for n in names]
+            f"param packing not supported for family '{fam}' "
+            f"(have {sorted(_SUPPORTED_FAMILIES)})")
     if not cfg.tie_embeddings:
         paths.append(("head",))
     return tuple(paths)
@@ -122,6 +134,9 @@ def packed_param_specs(cfg: ModelConfig, fmt: PositFormat = None):
 def pack_manifest(cfg: ModelConfig, fmt: PositFormat = None) -> dict:
     """Checkpoint `extra` metadata marking a packed-weights checkpoint."""
     fmt = fmt or cfg.quant.weights
+    if fmt is None:
+        raise ValueError("pack_manifest needs a weights format "
+                         "(cfg.quant.weights or explicit fmt)")
     return {"packed_weights": True, "weights_format": str(fmt),
             "weights_n": fmt.n, "weights_es": fmt.es}
 

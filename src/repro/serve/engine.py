@@ -11,7 +11,10 @@ Weights may equally be posit-coded: `from_checkpoint` restores a packed
 checkpoint (models/packing.py) using the manifest's pack metadata, and the
 GEMM dispatch layer routes the packed weights through the fused Pallas
 kernel when cfg.quant.execution == 'fused' — posit codes HBM-to-MXU with
-one in-kernel decode, end to end.
+one in-kernel decode, end to end.  This includes MoE expert stacks: packed
+`we_*` weights restore as [.., E, K, N] code arrays and run through the
+grouped fused kernel (kernels/dispatch.qdot_grouped), so EP serving reads
+expert weights at int8/int16 width too.
 """
 from __future__ import annotations
 

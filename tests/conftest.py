@@ -1,7 +1,22 @@
 # NOTE: deliberately no XLA_FLAGS here — tests must see the real 1-device
 # world; multi-device tests spawn subprocesses that set their own flags.
+import os
+
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import settings
+
+    # "ci" is the fixed-seed profile the workflow selects via
+    # HYPOTHESIS_PROFILE=ci: derandomize makes every run replay the same
+    # example sequence, so a red CI is reproducible locally byte for byte.
+    settings.register_profile("ci", max_examples=150, deadline=None,
+                              derandomize=True, print_blob=True)
+    settings.register_profile("dev", max_examples=30, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:  # property tests importorskip hypothesis themselves
+    pass
 
 
 @pytest.fixture(scope="session")

@@ -106,6 +106,85 @@ def test_execution_plan_validation():
 
 
 # ---------------------------------------------------------------------------
+# grouped dispatch edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_ragged_tiles_pad_with_posit_zero(rng):
+    """Tile sizes that divide neither M, N nor K: the kernel pads blocks
+    internally and posit code 0 decodes to exact 0.0, so ragged shapes
+    match the un-tiled reference exactly (up to f32 association order)."""
+    from repro.core.formats import PositFormat
+    from repro.kernels import posit_matmul as pm
+
+    x = jnp.asarray(rng.normal(0, 1, (3, 7, 41)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (3, 41, 21)).astype(np.float32))
+    a_codes = posit.pack(x, P13_2)
+    w_codes = posit.pack(w, P16_2)
+    got = pm.posit_matmul_grouped(a_codes, w_codes, P13_2, P16_2, None,
+                                  bm=4, bn=16, bk=16, interpret=True)
+    want = jnp.einsum("ecd,edf->ecf", posit.unpack(a_codes, P13_2),
+                      posit.unpack(w_codes, P16_2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # fmt_out set: the single output encode runs per expert tile
+    enc = pm.posit_matmul_grouped(a_codes, w_codes, P13_2, P16_2, P16_2,
+                                  bm=4, bn=16, bk=16, interpret=True)
+    assert enc.dtype == jnp.int16
+    assert (np.asarray(enc) ==
+            np.asarray(posit.encode(want, P16_2)).astype(np.int16)).all()
+
+
+def test_grouped_packed_without_weights_format_raises():
+    policy = QuantPolicy()  # no formats set
+    with pytest.raises(ValueError, match="weights"):
+        dispatch.qdot_grouped(jnp.ones((2, 3, 4)),
+                              jnp.zeros((2, 4, 5), jnp.int16), policy)
+
+
+def test_grouped_rank_validation():
+    policy = QuantPolicy(weights=P16_2)
+    x3, w3 = jnp.ones((2, 3, 4)), jnp.ones((2, 4, 5))
+    with pytest.raises(ValueError, match="3-D"):
+        dispatch.qdot_grouped(x3, jnp.ones((4, 5)), policy)  # 2-D weights
+    with pytest.raises(ValueError, match=r"\[E, C, K\]"):
+        dispatch.qdot_grouped(jnp.ones((3, 4)), w3, policy)  # 2-D acts
+    with pytest.raises(ValueError, match="mismatch"):
+        dispatch.qdot_grouped(jnp.ones((2, 3, 6)), w3, policy)  # bad K
+    with pytest.raises(ValueError, match="mismatch"):
+        dispatch.qdot_grouped(jnp.ones((3, 3, 4)), w3, policy)  # bad E
+    # qdot itself still rejects stacked weights
+    with pytest.raises(ValueError, match="2-D"):
+        dispatch.qdot(jnp.ones((3, 4)), w3, policy)
+
+
+@pytest.mark.parametrize("plan", ["fake_quant", "fused", "bit_exact"])
+def test_grouped_out_dtype_casting(rng, plan):
+    """out_dtype is honored by every plan; default returns x.dtype."""
+    x = jnp.asarray(rng.normal(0, 1, (2, 3, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.3, (2, 8, 4)).astype(np.float32))
+    policy = QuantPolicy(weights=P13_2, activations=P13_2,
+                         execution=plan, pdpu_n=4)
+    out = dispatch.qdot_grouped(x, w, policy)
+    assert out.dtype == x.dtype
+    out_bf = dispatch.qdot_grouped(x.astype(jnp.bfloat16), w, policy)
+    assert out_bf.dtype == jnp.bfloat16
+    out_cast = dispatch.qdot_grouped(x, w, policy, out_dtype=jnp.bfloat16)
+    assert out_cast.dtype == jnp.bfloat16
+
+
+def test_grouped_fake_quant_matches_per_expert_qdot(rng):
+    """qdot_grouped(fake_quant) is exactly E independent qdots."""
+    x = jnp.asarray(rng.normal(0, 1, (3, 4, 10)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (3, 10, 6)).astype(np.float32))
+    policy = QuantPolicy(weights=P16_2, activations=P13_2)
+    got = dispatch.qdot_grouped(x, w, policy)
+    for e in range(3):
+        want = dispatch.qdot(x[e], w[e], policy)
+        assert (np.asarray(got[e]) == np.asarray(want)).all(), e
+
+
+# ---------------------------------------------------------------------------
 # model-level parity + pack -> checkpoint -> load -> serve round trip
 # ---------------------------------------------------------------------------
 

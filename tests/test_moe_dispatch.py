@@ -1,0 +1,237 @@
+"""Grouped posit GEMM path: cross-plan parity at qdot_grouped level, MoE
+model-level parity over packed expert stacks, and packed-expert serving
+through ServingEngine.from_checkpoint (all Pallas in interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pdpu as pdpu_core
+from repro.core import posit
+from repro.core.formats import P8_2, P13_2, P16_2
+from repro.core.quant import QuantPolicy, policy_by_name
+from repro.kernels import dispatch
+
+
+@pytest.fixture
+def exw(rng):
+    x = jnp.asarray(rng.normal(0, 1, (4, 6, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (4, 40, 24)).astype(np.float32))
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# qdot_grouped plan parity
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_fake_quant_matches_fused(exw):
+    """Both plans compute on the same decoded posit values per expert with
+    f32 accumulation — only tiling order can differ."""
+    x, w = exw
+    policy = QuantPolicy(weights=P16_2, activations=P13_2)
+    a = dispatch.qdot_grouped(x, w, policy)
+    b = dispatch.qdot_grouped(x, w, policy.with_execution("fused"))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_grouped_fused_packed_equals_float_weights(exw):
+    """Packing the expert stack is the same single rounding the fused path
+    applies on the fly — packed vs float experts are indistinguishable."""
+    x, w = exw
+    policy = QuantPolicy(weights=P16_2, activations=P13_2, execution="fused")
+    got_f = dispatch.qdot_grouped(x, w, policy)
+    got_p = dispatch.qdot_grouped(x, posit.pack(w, P16_2), policy)
+    assert (np.asarray(got_f) == np.asarray(got_p)).all()
+
+
+def test_grouped_fake_quant_vs_fused_on_decoded_packed_experts(exw):
+    """Value parity on a *packed* expert stack: serving a packed checkpoint
+    with the fake_quant plan (decode once per use) and with the fused plan
+    (in-kernel decode) computes the same quantized function."""
+    x, w = exw
+    w_codes = posit.pack(w, P16_2)
+    policy = QuantPolicy(weights=P16_2)
+    a = dispatch.qdot_grouped(x, w_codes, policy)
+    b = dispatch.qdot_grouped(x, w_codes, policy.with_execution("fused"))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_grouped_float_activation_fast_path(exw):
+    """activations=None: float activations x in-kernel-decoded expert
+    stacks (the serving default) equals the decode-then-einsum reference."""
+    x, w = exw
+    policy = QuantPolicy(weights=P16_2, execution="fused")
+    w_codes = posit.pack(w, P16_2)
+    got = dispatch.qdot_grouped(x, w_codes, policy)
+    want = jnp.einsum("ecd,edf->ecf", x, posit.unpack(w_codes, P16_2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_grouped_batched_activations_match_per_expert_qdot(exw, rng):
+    """[B, E, Cg, K] activations fold onto per-expert rows and back; every
+    (b, e) slab must equal the 2-D qdot of that slab."""
+    _, w = exw
+    x = jnp.asarray(rng.normal(0, 1, (2, 4, 5, 40)).astype(np.float32))
+    policy = QuantPolicy(weights=P16_2, execution="fused")
+    w_codes = posit.pack(w, P16_2)
+    got = dispatch.qdot_grouped(x, w_codes, policy)
+    assert got.shape == (2, 4, 5, 24)
+    for b in range(2):
+        for e in range(4):
+            want = dispatch.qdot(x[b, e], w_codes[e], policy)
+            np.testing.assert_allclose(np.asarray(got[b, e]),
+                                       np.asarray(want),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_grouped_bit_exact_matches_chunked_pdpu_reference(rng):
+    """bit_exact grouped == the core chunked-PDPU oracle run expert by
+    expert, code for code (the hardware-model reference datapath)."""
+    E = 3
+    x = jnp.asarray(rng.normal(0, 1, (E, 4, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.3, (E, 8, 6)).astype(np.float32))
+    policy = QuantPolicy(weights=P13_2, activations=P13_2,
+                         execution="bit_exact", pdpu_n=4)
+    got = dispatch.qdot_grouped(x, w, policy, out_dtype=jnp.float32)
+    cfg = policy.pdpu_config()
+    for e in range(E):
+        want_codes = pdpu_core.pdpu_matmul_exact(
+            posit.encode(x[e], cfg.fmt_in), posit.encode(w[e], cfg.fmt_in),
+            cfg)
+        want = posit.decode(want_codes, cfg.fmt_out)
+        assert (np.asarray(got[e]) == np.asarray(want)).all(), e
+
+
+def test_grouped_bit_exact_pads_ragged_contraction(rng):
+    """K not divisible by the PDPU chunk size pads with exact posit zeros."""
+    x = jnp.asarray(rng.normal(0, 1, (2, 2, 10)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.3, (2, 10, 3)).astype(np.float32))
+    policy = QuantPolicy(weights=P13_2, activations=P13_2,
+                         execution="bit_exact", pdpu_n=4)
+    got = dispatch.qdot_grouped(x, w, policy, out_dtype=jnp.float32)
+    cfg = policy.pdpu_config()
+    for e in range(2):
+        a = jnp.pad(posit.encode(x[e], cfg.fmt_in), ((0, 0), (0, 2)))
+        b = jnp.pad(posit.encode(w[e], cfg.fmt_in), ((0, 2), (0, 0)))
+        want = posit.decode(pdpu_core.pdpu_matmul_exact(a, b, cfg),
+                            cfg.fmt_out)
+        assert (np.asarray(got[e]) == np.asarray(want)).all(), e
+
+
+# ---------------------------------------------------------------------------
+# MoE model-level parity + packed-expert serving
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg(name="qwen3_moe_235b", **kw):
+    from repro import configs
+    return configs.get_smoke(name).replace(n_layers=1, **kw)
+
+
+@pytest.mark.parametrize("grouped_dispatch", [False, True],
+                         ids=["sorted", "gshard"])
+def test_moe_model_fake_vs_fused_logits_parity(rng, grouped_dispatch):
+    """Whole-MoE forward: the fused grouped kernel over packed expert
+    stacks ~= fake_quant on float masters, for both dispatch flavors
+    (covers the [E, C, D] and [B, E, Cg, D] activation layouts)."""
+    from repro.models import api
+
+    cfg_fake = _moe_cfg(quant=QuantPolicy(weights=P16_2),
+                        moe_grouped_dispatch=grouped_dispatch)
+    cfg_fused = cfg_fake.replace(
+        quant=QuantPolicy(weights=P16_2, execution="fused"))
+    params = api.init(jax.random.key(1), cfg_fake)
+    packed = api.pack_params(params, cfg_fused)
+    assert packed["layers"]["we_gate"].dtype == jnp.int16
+    tokens = jnp.asarray(rng.integers(0, cfg_fake.vocab_size, (2, 6)),
+                         jnp.int32)
+    logits_fake = api.apply(params, {"tokens": tokens}, cfg_fake)
+    logits_fused = api.apply(packed, {"tokens": tokens}, cfg_fused)
+    np.testing.assert_allclose(np.asarray(logits_fake),
+                               np.asarray(logits_fused),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_shared_experts_pack_and_fuse(rng):
+    """deepseek-style shared experts pack alongside the routed stacks and
+    the fused forward still matches fake_quant."""
+    from repro.models import api
+
+    cfg_fake = _moe_cfg("deepseek_moe_16b", quant=QuantPolicy(weights=P16_2))
+    cfg_fused = cfg_fake.replace(
+        quant=QuantPolicy(weights=P16_2, execution="fused"))
+    params = api.init(jax.random.key(2), cfg_fake)
+    packed = api.pack_params(params, cfg_fused)
+    for n in ("we_gate", "we_up", "we_down", "ws_gate", "ws_up", "ws_down"):
+        assert packed["layers"][n].dtype == jnp.int16, n
+    tokens = jnp.asarray(rng.integers(0, cfg_fake.vocab_size, (2, 5)),
+                         jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(api.apply(params, {"tokens": tokens}, cfg_fake)),
+        np.asarray(api.apply(packed, {"tokens": tokens}, cfg_fused)),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_moe_pack_checkpoint_serve_roundtrip(rng, tmp_path):
+    """Packed expert stacks through the checkpoint manifest and
+    ServingEngine.from_checkpoint: EP serving consumes int16 expert codes
+    end to end (prefill + continuous-batching decode)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.models import api
+    from repro.serve import Request, ServingEngine
+
+    cfg = _moe_cfg(quant=policy_by_name("serve_fused_p16"))
+    params = api.init(jax.random.key(0), cfg)
+    packed = api.pack_params(params, cfg)
+    assert api.weight_bytes(packed) < api.weight_bytes(params)
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, packed, extra=api.pack_manifest(cfg))
+    assert mgr.read_manifest(7)["extra"]["packed_weights"] is True
+
+    engine = ServingEngine.from_checkpoint(cfg, str(tmp_path),
+                                           batch_slots=2, max_seq=24)
+    # the restored expert stacks are the packed codes, bit for bit
+    for n in ("we_gate", "we_up", "we_down"):
+        assert engine.params["layers"][n].dtype == jnp.int16, n
+        assert (np.asarray(engine.params["layers"][n]) ==
+                np.asarray(packed["layers"][n])).all(), n
+
+    for i in range(3):
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+            max_new_tokens=3))
+    done = engine.run()
+    assert len(done) == 3
+    for req in done:
+        assert len(req.out_tokens) == 3
+        assert all(0 <= t < cfg.vocab_size for t in req.out_tokens)
+
+
+def test_moe_packed_serve_matches_in_memory_packed(rng, tmp_path):
+    """from_checkpoint MoE serving == serving the in-memory packed tree."""
+    from repro.checkpoint import CheckpointManager
+    from repro.models import api
+    from repro.serve import Request, ServingEngine
+
+    cfg = _moe_cfg(quant=policy_by_name("serve_fused_p16"))
+    params = api.init(jax.random.key(3), cfg)
+    packed = api.pack_params(params, cfg)
+    CheckpointManager(str(tmp_path)).save(0, packed,
+                                          extra=api.pack_manifest(cfg))
+    prompts = [rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+               for _ in range(2)]
+
+    def run(engine):
+        for i, p in enumerate(prompts):
+            engine.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+        return {r.rid: r.out_tokens for r in engine.run()}
+
+    out_mem = run(ServingEngine(cfg, packed, batch_slots=2, max_seq=16))
+    out_ckpt = run(ServingEngine.from_checkpoint(cfg, str(tmp_path),
+                                                 batch_slots=2, max_seq=16))
+    assert out_mem == out_ckpt
