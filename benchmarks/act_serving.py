@@ -1,0 +1,70 @@
+"""Shared activation-coded serving measurement (used by bench_exec_paths
+and bench_moe_paths): float-activation fused vs both-operands fused on a
+packed checkpoint — the accuracy/bandwidth serving trade.
+
+Each row: [model, act_mode, B, S, forward_ms, act_bytes_per_elem,
+logits_rmse_vs_float_act].  act_bytes_per_elem is *measured* from the
+container dtype the activation operand actually travels in (the codec
+kernel's output for the coded mode), not from the format label — a
+regression that widens the operand back to f32 shows up here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.timing import time_ms
+except ImportError:  # bare-script run: benchmarks/ itself is sys.path[0]
+    from timing import time_ms
+from repro.kernels import ops
+from repro.models import api
+
+
+def _act_container_bytes(act_fmt):
+    """Width of the activation operand entering the GEMM, measured from the
+    codec kernel's actual output container (float path ships f32)."""
+    if act_fmt is None:
+        return np.dtype(np.float32).itemsize
+    probe = ops.encode(jnp.zeros((1, 1), jnp.float32), act_fmt)
+    return probe.dtype.itemsize
+
+
+def bench_act_serving(cfg, B, S, rng, act_fmt, reps=2):
+    """Run the packed model fused with float vs posit-coded activations."""
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    cfg_ref = cfg.replace(quant=cfg.quant.with_execution("fused"))
+    cfg_act = cfg.replace(quant=cfg.quant.with_serving_activations(act_fmt))
+    params = api.init(jax.random.key(0), cfg_ref)
+    packed = api.pack_params(params, cfg_ref)
+    rows, logits = [], {}
+    for label, pcfg, fmt in (("fused_float_act", cfg_ref, None),
+                             ("fused_act_coded", cfg_act, act_fmt)):
+        fwd = jax.jit(lambda p, t, c=pcfg: api.apply(p, {"tokens": t}, c))
+        ms = time_ms(fwd, packed, tokens, reps=reps)
+        logits[label] = np.asarray(fwd(packed, tokens), np.float64)
+        rows.append([pcfg.name, label, B, S, ms,
+                     float(_act_container_bytes(fmt))])
+    ref = logits["fused_float_act"]
+    for row, label in zip(rows, logits):
+        err = logits[label] - ref
+        row.append(float(np.sqrt(np.mean(err ** 2))))
+    return rows
+
+
+def print_act_rows(rows):
+    print("\nmodel,act_mode,batch,seq,forward_ms,"
+          "act_bytes_per_elem,logits_rmse_vs_float_act")
+    for name, label, B, S, ms, ab, rmse in rows:
+        print(f"{name},{label},{B},{S},{ms:.1f},{ab},{rmse:.3e}")
+
+
+def act_checks(rows):
+    """Shared assertions: coded operands at most half the f32 width and a
+    finite deviation from the float-activation reference."""
+    float_row, coded_row = rows
+    return {
+        "act_bandwidth_halved": coded_row[5] * 2 <= float_row[5],
+        "act_coded_accuracy_sane": bool(np.isfinite(coded_row[6])),
+    }

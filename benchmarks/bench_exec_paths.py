@@ -16,6 +16,19 @@ fake_quant and fused run on a smoke config; bit_exact is O(M*N*K) select
 chains (VPU-bound by design), so it runs on a micro config — the point is
 plan parity and relative cost, not absolute numbers.
 
+Two further sections:
+
+  activation-coded serving : float-activation fused vs both-operands fused
+                     (QuantPolicy.with_serving_activations) — the
+                     accuracy/bandwidth trade: logits RMSE against the
+                     float-activation reference vs GEMM activation-operand
+                     bytes per element (f32 vs posit code width).
+  QAT train step   : jit'd value_and_grad of the LM loss under fake_quant
+                     vs fused execution — the kernel-in-the-loop QAT cost,
+                     plus the max relative grad deviation between the two
+                     STE datapaths (they compute on identical quantized
+                     operands, so this is reduction-order noise).
+
     PYTHONPATH=src python benchmarks/bench_exec_paths.py
 """
 from __future__ import annotations
@@ -26,8 +39,11 @@ import numpy as np
 
 try:
     from benchmarks.timing import time_ms
+    from benchmarks.act_serving import act_checks, bench_act_serving, \
+        print_act_rows
 except ImportError:  # bare-script run: benchmarks/ itself is sys.path[0]
     from timing import time_ms
+    from act_serving import act_checks, bench_act_serving, print_act_rows
 from repro import configs
 from repro.core.quant import QuantPolicy
 from repro.core.formats import P13_2, P16_2, P8_2
@@ -51,6 +67,32 @@ def bench_cfg(cfg, plans, B, S, rng, reps=3):
     return rows
 
 
+def bench_train_qat(micro, B=2, S=16, reps=2):
+    """jit'd value_and_grad of the LM loss: fake_quant STE vs the fused
+    kernel-in-the-loop STE (custom_vjp over the packed Pallas forward)."""
+    from repro.train import step as step_lib
+
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, micro.vocab_size, (B, S)), jnp.int32)
+    labs = jnp.asarray(rng.integers(0, micro.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": toks, "labels": labs}
+    rows, grads = [], {}
+    for plan in ("fake_quant", "fused"):
+        pcfg = micro.replace(quant=micro.quant.with_execution(plan))
+        params = api.init(jax.random.key(0), pcfg)
+        grad_fn = jax.jit(jax.value_and_grad(
+            lambda p, b, c=pcfg: step_lib.loss_fn(p, b, c)[0]))
+        ms = time_ms(grad_fn, params, batch, reps=reps)
+        loss, g = grad_fn(params, batch)
+        grads[plan] = g
+        rows.append((pcfg.name, plan, B, S, ms, float(loss)))
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b)) /
+                           jnp.maximum(jnp.max(jnp.abs(a)), 1e-12)),
+        grads["fake_quant"], grads["fused"])
+    return rows, max(jax.tree.leaves(diffs))
+
+
 def main():
     rng = np.random.default_rng(0)
     rows = []
@@ -72,12 +114,30 @@ def main():
     for name, plan, B, S, ms, wb, kb in rows:
         print(f"{name},{plan},{B},{S},{ms:.1f},{wb},{kb}")
 
+    # serving accuracy/bandwidth trade: float vs posit-coded activations
+    act_rows = bench_act_serving(smoke, B=2, S=32, rng=rng, act_fmt=P13_2,
+                                 reps=3)
+    print_act_rows(act_rows)
+
+    # kernel-in-the-loop QAT: train-step cost + grad parity across plans
+    qat_micro = micro.replace(quant=QuantPolicy(weights=P13_2,
+                                                activations=P13_2))
+    qat_rows, grad_dev = bench_train_qat(qat_micro)
+    print("\nmodel,plan,batch,seq,train_step_ms,loss")
+    for name, plan, B, S, ms, loss in qat_rows:
+        print(f"{name},{plan},{B},{S},{ms:.1f},{loss:.4f}")
+    print(f"max relative grad deviation fused vs fake_quant: {grad_dev:.3e}")
+
     by_plan = {r[1]: r for r in rows[:2]}
     f32_w = by_plan["fake_quant"][5]
     packed_w = by_plan["fused"][5]
     checks = {
         "packed_weights_smaller": packed_w < f32_w,
         "all_plans_ran": len(rows) == 5,
+        # activation-coded path: halved operand bandwidth, sane accuracy
+        **act_checks(act_rows),
+        # the two STE datapaths back-propagate the same quantized operands
+        "qat_grads_match": grad_dev < 1e-2,
     }
     print("checks:", checks)
     assert all(checks.values()), checks

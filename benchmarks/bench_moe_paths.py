@@ -15,6 +15,12 @@ QuantPolicy.execution plan and both dispatch flavors:
 Plans: fake_quant on float masters (train), fused over packed expert codes
 (serve), bit_exact chunked-PDPU per expert on a micro config (validation).
 
+A final section measures activation-coded grouped serving
+(QuantPolicy.with_serving_activations): the expert slabs enter the grouped
+fused kernel as posit codes alongside the packed weights — both GEMM
+operands at code width — reporting the logits RMSE against the
+float-activation reference (the accuracy/bandwidth trade on the MoE path).
+
     PYTHONPATH=src python benchmarks/bench_moe_paths.py
 """
 from __future__ import annotations
@@ -25,8 +31,11 @@ import numpy as np
 
 try:
     from benchmarks.timing import time_ms
+    from benchmarks.act_serving import act_checks, bench_act_serving, \
+        print_act_rows
 except ImportError:  # bare-script run: benchmarks/ itself is sys.path[0]
     from timing import time_ms
+    from act_serving import act_checks, bench_act_serving, print_act_rows
 from repro import configs
 from repro.core.formats import P13_2, P16_2, P8_2
 from repro.core.quant import QuantPolicy
@@ -82,6 +91,10 @@ def main():
     for name, plan, disp, B, S, ms, eb, wb in rows:
         print(f"{name},{plan},{disp},{B},{S},{ms:.1f},{eb},{wb}")
 
+    # activation-coded grouped serving: both operands at code width
+    act_rows = bench_act_serving(smoke, B=2, S=16, rng=rng, act_fmt=P13_2)
+    print_act_rows(act_rows)
+
     by_plan = {r[1]: r for r in rows[:2]}
     f32_experts = by_plan["fake_quant"][6]
     packed_experts = by_plan["fused"][6]
@@ -90,6 +103,7 @@ def main():
         "packed_experts_half": packed_experts * 2 == f32_experts,
         "packed_total_smaller": by_plan["fused"][7] < by_plan["fake_quant"][7],
         "all_plans_ran": len(rows) == 7,
+        **act_checks(act_rows),
     }
     print("checks:", checks)
     assert all(checks.values()), checks

@@ -7,7 +7,11 @@ End-to-end demonstration of the execution-plan architecture:
   3. `ServingEngine.from_checkpoint` restores the codes and serves them
      through the *fused* Pallas GEMM (in-kernel decode, wide f32 MXU
      accumulate — the PDPU datapath on the model hot path), with the KV
-     cache stored as P(8,2) codes decoded exactly on read.
+     cache stored as P(8,2) codes decoded exactly on read,
+  4. the same checkpoint is re-served *activation-coded*
+     (`serve_fused_p16_a13`): activations are encoded to P(13,2) too, so
+     both GEMM operands run through the both-operands fused kernel at
+     int16 width — the accuracy/bandwidth serving knob.
 
     PYTHONPATH=src python examples/serve_posit_lm.py
 """
@@ -42,13 +46,22 @@ with tempfile.TemporaryDirectory() as ckpt_dir:
     print(f"engine resident: {engine.weight_bytes()} B weights, "
           f"{engine.kv_cache_bytes()} B kv cache (P(8,2) codes)")
     rng = np.random.default_rng(0)
-    for i in range(10):
-        engine.submit(Request(
-            rid=i, prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
-            max_new_tokens=12))
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(10)]
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=12))
     t0 = time.perf_counter()
     done = engine.run()
     dt = time.perf_counter() - t0
+
+    # activation-coded serving: same packed checkpoint, activations now
+    # travel as P(13,2) codes through the both-operands fused kernel
+    cfg_act = cfg.replace(quant=policy_by_name("serve_fused_p16_a13"))
+    engine_act = ServingEngine.from_checkpoint(cfg_act, ckpt_dir,
+                                               batch_slots=4, max_seq=96)
+    for i, p in enumerate(prompts[:4]):
+        engine_act.submit(Request(rid=i, prompt=p, max_new_tokens=12))
+    done_act = engine_act.run()
 
 tok = sum(len(r.out_tokens) for r in done)
 print(f"served {len(done)} requests / {tok} tokens in {dt:.2f}s "
@@ -57,3 +70,9 @@ print(f"execution plan: {cfg.quant.execution} "
       f"(weights {cfg.quant.weights}, kv {cfg.quant.kv_cache})")
 print(f"kv cache dtype: {engine.cache['k'].dtype} (posit P(8,2) codes)")
 print(f"sample continuation: {done[0].out_tokens}")
+print(f"activation-coded plan: {engine_act.execution_summary()}")
+match = sum(a.out_tokens == b.out_tokens
+            for a, b in zip(done[:4], done_act)) / len(done_act)
+print(f"activation-coded vs float-activation continuations: "
+      f"{match:.0%} identical over {len(done_act)} requests "
+      f"(both operands int16 codes vs f32 activations)")

@@ -9,18 +9,23 @@ format, and the distributed optimizer uses `grad_format` for posit-compressed
 gradient all-reduce.
 
 Beyond the *formats*, the policy also selects the *execution plan* — which
-datapath actually runs each matmul (`kernels/dispatch.py`):
+datapath actually runs each matmul (`kernels/dispatch.py`).  The plan table
+(`PLAN_TABLE`) records how each datapath may be used:
 
   fake_quant : decode(encode(x)) on both operands, then a plain f32 MXU dot
-               with straight-through gradients.  The training path: exact
+               with straight-through gradients.  Trainable + servable: exact
                posit values, full autodiff support, weights stay float.
   fused      : operands travel as posit *codes* (int8/int16) into the Pallas
                fused GEMM — in-kernel decode, wide f32 accumulate, single
-               encode.  The serving fast path: weights may be stored packed
-               (see models/packing.py), halving/quartering weight HBM.
+               encode.  Trainable + servable: serving reads weights packed
+               (see models/packing.py), halving/quartering weight HBM;
+               training runs the same kernel forward with a custom_vjp STE
+               backward (kernels/ops.fused_matmul_ste), so QAT loss/grads
+               come from the real packed datapath.
   bit_exact  : the chunked-PDPU kernel — the paper's S1..S6 integer datapath
-               including the W_m alignment truncation.  Hardware-faithful
+               including the W_m alignment truncation.  Forward-only
                validation at small shapes; O(M*N*K) select-chains, not fast.
+               `jax.grad` through it raises (see TRAINABLE_PLANS).
 
 On TPU the decode of a P(n<=16,es) code into f32 is *exact* (see
 `core/posit.py`), so the MXU matmul over decoded posits with f32 accumulation
@@ -38,7 +43,36 @@ import jax.numpy as jnp
 from .formats import PositFormat, PDPUConfig, P16_2, P13_2, P8_2
 from . import posit
 
-EXECUTION_PLANS = ("fake_quant", "fused", "bit_exact")
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """One row of the execution-plan table: how a datapath may be used.
+
+    trainable : `jax.grad` flows through it (an STE backward exists).
+    servable  : the serving engine may run it on the decode hot path.
+    datapath  : one-line description of what actually executes.
+    """
+
+    trainable: bool
+    servable: bool
+    datapath: str
+
+
+PLAN_TABLE = {
+    "fake_quant": ExecutionPlan(
+        trainable=True, servable=True,
+        datapath="STE fake-quantization + plain f32 MXU dot"),
+    "fused": ExecutionPlan(
+        trainable=True, servable=True,
+        datapath="packed posit codes -> Pallas fused GEMM (in-kernel "
+                 "decode, f32 MXU accumulate, single encode); custom_vjp "
+                 "STE backward for QAT"),
+    "bit_exact": ExecutionPlan(
+        trainable=False, servable=True,
+        datapath="chunked-PDPU kernel (S1..S6 integer datapath, W_m "
+                 "alignment truncation); forward-only validation"),
+}
+EXECUTION_PLANS = tuple(PLAN_TABLE)
+TRAINABLE_PLANS = tuple(p for p, row in PLAN_TABLE.items() if row.trainable)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,10 +84,10 @@ class QuantPolicy:
     kv_cache    : serving KV-cache storage format.
     grad_allreduce : gradient compression format for cross-replica reduce.
     accum_dtype : wide accumulation dtype — the W_m analogue on TPU.
-    execution   : which GEMM datapath runs the matmuls (see module docstring
-                  and kernels/dispatch.py): 'fake_quant' | 'fused' |
-                  'bit_exact'.  Only 'fake_quant' is differentiable; the
-                  other two are inference/validation plans.
+    execution   : which GEMM datapath runs the matmuls (see PLAN_TABLE and
+                  kernels/dispatch.py): 'fake_quant' | 'fused' |
+                  'bit_exact'.  fake_quant and fused are trainable (both
+                  carry STE backwards); bit_exact is forward-only.
     pdpu_n, pdpu_w_m : chunk size and alignment width of the PDPU instance
                   used by the 'bit_exact' plan (paper Table I knobs).
     """
@@ -94,10 +128,39 @@ class QuantPolicy:
             return kv
         return posit.quantize(kv, self.kv_cache)
 
+    @property
+    def plan(self) -> ExecutionPlan:
+        """Plan-table row for the selected execution datapath."""
+        return PLAN_TABLE[self.execution]
+
+    @property
+    def trainable(self) -> bool:
+        """True if `jax.grad` flows through this policy's datapath."""
+        return self.plan.trainable
+
+    def require_trainable(self) -> "QuantPolicy":
+        """Raise early (before tracing) when the selected datapath cannot
+        back-propagate — the same condition the dispatch-layer grad barrier
+        enforces lazily under `jax.grad`."""
+        if not self.trainable:
+            raise ValueError(
+                f"execution plan '{self.execution}' is not differentiable; "
+                f"trainable plans are {TRAINABLE_PLANS}.  Switch with "
+                f"QuantPolicy.with_execution(...) for QAT — bit_exact is a "
+                f"forward-only validation datapath.")
+        return self
+
     def with_execution(self, plan: str) -> "QuantPolicy":
         """Same formats, different datapath — e.g. train fake_quant, then
         serve the identical policy fused."""
         return dataclasses.replace(self, execution=plan)
+
+    def with_serving_activations(self, fmt: PositFormat) -> "QuantPolicy":
+        """Activation-format serving knob: encode matmul activations to
+        `fmt` posit codes and run the both-operands fused kernel, trading a
+        rounding per activation element for code-width GEMM operand
+        bandwidth (int8/int16 instead of f32 into the MXU tiles)."""
+        return dataclasses.replace(self, activations=fmt, execution="fused")
 
     def pdpu_config(self) -> PDPUConfig:
         """PDPU instance for the bit_exact plan: inputs in the weights
@@ -118,6 +181,10 @@ UNIFORM_P16 = QuantPolicy(weights=P16_2, activations=P16_2)
 SERVE_P16_KV8 = QuantPolicy(weights=P16_2, kv_cache=P8_2)
 # Serving fast path: packed posit weights through the fused Pallas kernel.
 SERVE_FUSED_P16 = QuantPolicy(weights=P16_2, kv_cache=P8_2, execution="fused")
+# Activation-coded serving: both operands travel as posit codes through the
+# both-operands fused kernel (the accuracy/bandwidth trade — one extra
+# rounding per activation element for int16 instead of f32 GEMM operands).
+SERVE_FUSED_P16_A13 = SERVE_FUSED_P16.with_serving_activations(P13_2)
 # Hardware-faithful validation: every matmul through the chunked-PDPU kernel.
 VALIDATE_BIT_EXACT = QuantPolicy(weights=P13_2, activations=P13_2,
                                  execution="bit_exact")
@@ -132,6 +199,7 @@ def policy_by_name(name: str) -> QuantPolicy:
         "uniform_p16": UNIFORM_P16,
         "serve_p16_kv8": SERVE_P16_KV8,
         "serve_fused_p16": SERVE_FUSED_P16,
+        "serve_fused_p16_a13": SERVE_FUSED_P16_A13,
         "validate_bit_exact": VALIDATE_BIT_EXACT,
     }
     if name not in table:

@@ -1,23 +1,45 @@
 """Posit GEMM execution-plan dispatch — the one place model matmuls land.
 
 `models/common.qdot` (and therefore every projection in every architecture)
-routes here; `QuantPolicy.execution` picks the datapath:
+routes here; `QuantPolicy.execution` picks the datapath.  The plan table
+(mirrored in `core/quant.PLAN_TABLE`):
 
-  fake_quant : STE fake-quantization + plain f32 dot.  Differentiable; the
-               training default.  Weights may be float masters or packed
-               posit codes (a packed checkpoint served with this plan is
-               decoded once per use — same values, no Pallas dependency).
-  fused      : the Pallas fused GEMM (`ops.fused_matmul`): operands enter as
-               posit codes, decode on the VPU inside the kernel, accumulate
-               wide on the MXU, encode once.  With float activations
-               (policy.activations None) the serving fast path
-               `ops.matmul_posit_weights` runs instead — activations stay
-               float (an encode would add a rounding), weights decode
-               in-kernel.  Inference-only.
-  bit_exact  : the chunked-PDPU kernel (`ops.pdpu_matmul`) — the paper's
-               S1..S6 integer datapath with the W_m alignment truncation.
-               Bit-identical to a silicon PDPU array; O(M*N*K) select
-               chains, so use it for validation at small shapes.
+  plan        trainable  servable  datapath
+  ----------  ---------  --------  -------------------------------------------
+  fake_quant  yes        yes       STE fake-quantization + plain f32 dot.  The
+                                   training default.  Weights may be float
+                                   masters or packed posit codes (a packed
+                                   checkpoint served with this plan is decoded
+                                   once per use — same values, no Pallas
+                                   dependency).
+  fused       yes        yes       the Pallas fused GEMM (`ops.fused_matmul`):
+                                   operands enter as posit codes, decode on
+                                   the VPU inside the kernel, accumulate wide
+                                   on the MXU, encode once.  With float
+                                   activations (policy.activations None) the
+                                   serving fast path
+                                   `ops.matmul_posit_weights` runs instead —
+                                   activations stay float (an encode would add
+                                   a rounding), weights decode in-kernel.
+                                   Setting policy.activations (e.g. via
+                                   `QuantPolicy.with_serving_activations`)
+                                   runs the both-operands kernel: activations
+                                   travel as codes too — the activation-coded
+                                   serving mode, trading one rounding per
+                                   element for int8/int16 operand bandwidth.
+                                   Float-master weights take the custom_vjp
+                                   STE entry points (`ops.*_ste`): forward is
+                                   the identical packed kernel, backward is
+                                   straight-through w.r.t. float activations
+                                   and weight masters — kernel-in-the-loop
+                                   QAT.
+  bit_exact   no         yes       the chunked-PDPU kernel (`ops.pdpu_matmul`)
+                                   — the paper's S1..S6 integer datapath with
+                                   the W_m alignment truncation.  Bit-
+                                   identical to a silicon PDPU array; O(M*N*K)
+                                   select chains, so use it for validation at
+                                   small shapes.  `jax.grad` through it raises
+                                   a clear error (grad barrier below).
 
 Weights arrive either as float arrays (training params) or as packed posit
 codes in int8/int16 (see `models/packing.py`); the dispatcher detects the
@@ -40,16 +62,57 @@ Two entry points share the plan table:
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import posit
-from repro.core.quant import QuantPolicy
+from repro.core.quant import QuantPolicy, TRAINABLE_PLANS
 from . import ops
 
 
 def is_packed(w) -> bool:
     """True if `w` holds posit codes in an integer storage container."""
     return jnp.issubdtype(jnp.asarray(w).dtype, jnp.integer)
+
+
+_BIT_EXACT_MSG = (
+    f"execution plan 'bit_exact' is not differentiable; trainable plans "
+    f"are {TRAINABLE_PLANS}.  Switch the QuantPolicy with "
+    f".with_execution(...) for QAT — bit_exact is a forward-only "
+    f"validation datapath.")
+
+_PACKED_ACT_MSG = (
+    "the activation-coded fused plan over packed int weights is not "
+    "differentiable: the float->code activation encode drops tangents, so "
+    "gradients would silently be zero.  Unpack the checkpoint to float "
+    "masters (models/packing.unpack_params) to differentiate under the "
+    "fused plan.")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grad_barrier(reason: str, x):
+    """Identity in the primal; raises `reason` when differentiated.
+
+    Applied to float operands whose datapath has no backward.  Without it,
+    `jax.grad` through e.g. bit_exact would silently return zeros: the
+    operand's tangent is dropped at the float->code encode, so no autodiff
+    rule ever fires.  custom_vjp's fwd only runs under differentiation, so
+    the forward pass pays nothing.
+    """
+    return x
+
+
+def _grad_barrier_fwd(reason, x):
+    raise ValueError(reason)
+
+
+def _grad_barrier_bwd(reason, res, g):
+    raise AssertionError("unreachable: fwd always raises")
+
+
+_grad_barrier.defvjp(_grad_barrier_fwd, _grad_barrier_bwd)
 
 
 def _as_matrix(x):
@@ -90,23 +153,38 @@ def qdot(x, w, policy: QuantPolicy, prec_dtype=jnp.float32, out_dtype=None):
 
     if plan == "fused":
         fmt_w = policy.weights
-        w_codes = w if packed else ops.encode(w.astype(jnp.float32), fmt_w)
-        if policy.activations is None:
-            out = ops.matmul_posit_weights(xf, w_codes, fmt_w)
+        if packed:
+            # serving path: weights already posit codes, forward-only
+            if policy.activations is None:
+                out = ops.matmul_posit_weights(xf, w, fmt_w)
+            else:
+                xf = _grad_barrier(_PACKED_ACT_MSG, xf)
+                a_codes = ops.encode(xf.astype(jnp.float32),
+                                     policy.activations)
+                out = ops.fused_matmul(a_codes, w, policy.activations, fmt_w,
+                                       fmt_out=None)
         else:
-            a_codes = ops.encode(xf.astype(jnp.float32), policy.activations)
-            out = ops.fused_matmul(a_codes, w_codes, policy.activations, fmt_w,
-                                   fmt_out=None)
+            # float masters: the differentiable STE entry points — the same
+            # packed-kernel forward, straight-through backward (QAT)
+            if policy.activations is None:
+                out = ops.matmul_posit_weights_ste(
+                    xf.astype(jnp.float32), w.astype(jnp.float32), fmt_w)
+            else:
+                out = ops.fused_matmul_ste(xf.astype(jnp.float32),
+                                           w.astype(jnp.float32),
+                                           policy.activations, fmt_w)
         return out.reshape(lead + (w.shape[-1],)).astype(out_dtype)
 
     if plan == "bit_exact":
         cfg = policy.pdpu_config()
+        xf = _grad_barrier(_BIT_EXACT_MSG, xf)
         a_codes = posit.encode(xf.astype(jnp.float32), cfg.fmt_in)
         if packed:
             # packed weights are in policy.weights == cfg.fmt_in by
             # construction (pdpu_config derives fmt_in from it)
             w_codes = w.astype(jnp.int32) & cfg.fmt_in.mask
         else:
+            w = _grad_barrier(_BIT_EXACT_MSG, w)
             w_codes = posit.encode(w.astype(jnp.float32), cfg.fmt_in)
         pad_k = (-xf.shape[1]) % cfg.N  # whole chunks; code 0 is exact zero
         if pad_k:
@@ -164,27 +242,44 @@ def qdot_grouped(x, w, policy: QuantPolicy, prec_dtype=jnp.float32,
 
     if plan == "fused":
         fmt_w = policy.weights
-        w_codes = w if packed else ops.encode(w.astype(jnp.float32), fmt_w)
-        if policy.activations is None:
-            out = ops.matmul_posit_weights_grouped(xe, w_codes, fmt_w)
+        if packed:
+            # serving path: expert stacks already posit codes, forward-only
+            if policy.activations is None:
+                out = ops.matmul_posit_weights_grouped(xe, w, fmt_w)
+            else:
+                xe = _grad_barrier(_PACKED_ACT_MSG, xe)
+                a_codes = ops.encode(xe.astype(jnp.float32),
+                                     policy.activations)
+                out = ops.fused_matmul_grouped(a_codes, w,
+                                               policy.activations, fmt_w,
+                                               fmt_out=None)
         else:
-            a_codes = ops.encode(xe.astype(jnp.float32), policy.activations)
-            out = ops.fused_matmul_grouped(a_codes, w_codes,
-                                           policy.activations, fmt_w,
-                                           fmt_out=None)
+            # float masters: the grouped STE entry points (QAT datapath)
+            if policy.activations is None:
+                out = ops.matmul_posit_weights_grouped_ste(
+                    xe.astype(jnp.float32), w.astype(jnp.float32), fmt_w)
+            else:
+                out = ops.fused_matmul_grouped_ste(xe.astype(jnp.float32),
+                                                   w.astype(jnp.float32),
+                                                   policy.activations, fmt_w)
     elif plan == "bit_exact":
         cfg = policy.pdpu_config()
+        xe = _grad_barrier(_BIT_EXACT_MSG, xe)
         a_codes = posit.encode(xe.astype(jnp.float32), cfg.fmt_in)
         if packed:
             w_codes = w.astype(jnp.int32) & cfg.fmt_in.mask
         else:
+            w = _grad_barrier(_BIT_EXACT_MSG, w)
             w_codes = posit.encode(w.astype(jnp.float32), cfg.fmt_in)
         pad_k = (-K) % cfg.N  # whole chunks; code 0 is exact zero
         if pad_k:
             a_codes = jnp.pad(a_codes, ((0, 0), (0, 0), (0, pad_k)))
             w_codes = jnp.pad(w_codes, ((0, 0), (0, pad_k), (0, 0)))
-        out_codes = jnp.stack([  # validation plan: unrolled per expert
-            ops.pdpu_matmul(a_codes[e], w_codes[e], cfg) for e in range(E)])
+        # validation plan: one traced kernel call mapped over the expert
+        # dim (trace size stays O(1) in E, unlike a Python unroll)
+        out_codes = jax.lax.map(
+            lambda aw: ops.pdpu_matmul(aw[0], aw[1], cfg),
+            (a_codes, w_codes))
         out = posit.decode(out_codes, cfg.fmt_out)
     else:
         raise ValueError(f"unknown execution plan '{plan}'")

@@ -4,8 +4,22 @@ Central switch: on non-TPU backends every kernel runs in interpret mode
 (Pallas executes the kernel body with jnp on CPU), so the whole framework —
 models, tests, benchmarks — exercises the identical kernel code paths that
 compile to Mosaic on a real TPU.
+
+Two layers of entry points:
+
+  * raw kernels (`fused_matmul`, `matmul_posit_weights`, the grouped
+    variants, `pdpu_matmul`): operate on posit *codes*; forward-only —
+    Pallas calls have no autodiff rules and integer codes carry no tangents.
+  * STE entry points (`fused_matmul_ste`, `fused_matmul_grouped_ste` and
+    the `matmul_posit_weights*_ste` aliases): operate on *float masters*,
+    run the identical raw kernel forward (encode -> in-kernel decode GEMM)
+    and attach a `jax.custom_vjp` straight-through backward, so `jax.grad`
+    flows through the real fused datapath.  This is what lets QAT train on
+    the packed-kernel forward instead of the fake_quant stand-in.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -79,3 +93,110 @@ def matmul_posit_weights(x, w_codes, fmt_w: PositFormat, **kw):
     a = x.astype(jnp.float32)
     w = posit_codec.decode(w_codes, fmt_w, interpret=_interpret(), **kw)
     return jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# differentiable (STE) entry points over float masters
+# ---------------------------------------------------------------------------
+#
+# Forward runs the real fused datapath: the float masters are encoded to
+# posit codes and the Pallas kernel decodes them in-kernel, accumulates f32
+# on the MXU and returns f32 — exactly what serving executes.  Backward is
+# straight-through w.r.t. the float operands, using the *quantized* operand
+# values (the same values the kernel computed on), which is bit-for-bit the
+# gradient the fake_quant STE plan produces.  Residuals are kept minimal:
+# the posit codes of each quantized operand, saved once (int8/int16/int32 —
+# narrower than an f32 copy), decoded exactly in the backward pass; a
+# float-activation operand (fmt_a=None) is saved as-is.
+#
+# All STE entry points take and return float32 — the dispatch layer casts;
+# custom_vjp then only ever has to produce f32 cotangents.
+
+
+def _ste_primal(x, w, fmt_a, fmt_w):
+    """Shared fwd: encode masters, run the raw fused kernel, return the
+    f32 product plus the minimal residuals for the STE backward."""
+    w_codes = encode(w, fmt_w)
+    if fmt_a is None:  # float activations: the serving fast path
+        return matmul_posit_weights(x, w_codes, fmt_w), (x, w_codes)
+    a_codes = encode(x, fmt_a)
+    out = fused_matmul(a_codes, w_codes, fmt_a, fmt_w, fmt_out=None)
+    return out, (a_codes, w_codes)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fused_matmul_ste(x, w, fmt_a: PositFormat | None, fmt_w: PositFormat):
+    """Differentiable fused GEMM over float masters: x [M,K] @ w [K,N].
+
+    fmt_a=None keeps activations float (the `matmul_posit_weights` fast
+    path); otherwise both operands travel as codes through `fused_matmul`.
+    Backward: dx = g @ wq^T, dw = xq^T @ g with xq/wq the decoded quantized
+    operands — the straight-through gradients of the fake_quant plan.
+    """
+    return _ste_primal(x, w, fmt_a, fmt_w)[0]
+
+
+def _fused_ste_fwd(x, w, fmt_a, fmt_w):
+    return _ste_primal(x, w, fmt_a, fmt_w)
+
+
+def _fused_ste_bwd(fmt_a, fmt_w, res, g):
+    a_res, w_codes = res
+    aq = a_res if fmt_a is None else decode(a_res, fmt_a)
+    wq = decode(w_codes, fmt_w)
+    g = g.astype(jnp.float32)
+    dx = jnp.dot(g, wq.T, preferred_element_type=jnp.float32)
+    dw = jnp.dot(aq.astype(jnp.float32).T, g,
+                 preferred_element_type=jnp.float32)
+    return dx, dw
+
+
+fused_matmul_ste.defvjp(_fused_ste_fwd, _fused_ste_bwd)
+
+
+def matmul_posit_weights_ste(x, w, fmt_w: PositFormat):
+    """Differentiable serving fast path: float activations, posit weights
+    encoded from float masters in the forward, STE weight gradients."""
+    return fused_matmul_ste(x, w, None, fmt_w)
+
+
+def _ste_grouped_primal(x, w, fmt_a, fmt_w):
+    w_codes = encode(w, fmt_w)
+    if fmt_a is None:
+        return matmul_posit_weights_grouped(x, w_codes, fmt_w), (x, w_codes)
+    a_codes = encode(x, fmt_a)
+    out = fused_matmul_grouped(a_codes, w_codes, fmt_a, fmt_w, fmt_out=None)
+    return out, (a_codes, w_codes)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fused_matmul_grouped_ste(x, w, fmt_a: PositFormat | None,
+                             fmt_w: PositFormat):
+    """Differentiable grouped fused GEMM over float masters:
+    x [E,C,K] @ w [E,K,N] -> [E,C,N], same STE semantics as
+    `fused_matmul_ste` applied per expert (one batched backward einsum)."""
+    return _ste_grouped_primal(x, w, fmt_a, fmt_w)[0]
+
+
+def _grouped_ste_fwd(x, w, fmt_a, fmt_w):
+    return _ste_grouped_primal(x, w, fmt_a, fmt_w)
+
+
+def _grouped_ste_bwd(fmt_a, fmt_w, res, g):
+    a_res, w_codes = res
+    aq = a_res if fmt_a is None else decode(a_res, fmt_a)
+    wq = decode(w_codes, fmt_w)
+    g = g.astype(jnp.float32)
+    dx = jnp.einsum("ecf,edf->ecd", g, wq,
+                    preferred_element_type=jnp.float32)
+    dw = jnp.einsum("ecd,ecf->edf", aq.astype(jnp.float32), g,
+                    preferred_element_type=jnp.float32)
+    return dx, dw
+
+
+fused_matmul_grouped_ste.defvjp(_grouped_ste_fwd, _grouped_ste_bwd)
+
+
+def matmul_posit_weights_grouped_ste(x, w, fmt_w: PositFormat):
+    """Differentiable grouped serving fast path (float activations)."""
+    return fused_matmul_grouped_ste(x, w, None, fmt_w)

@@ -3,8 +3,11 @@
 Every matmul routes through `qdot`, which hands off to the posit GEMM
 dispatch layer (`kernels/dispatch.py`): the QuantPolicy's execution plan
 decides whether the dot fake-quantizes on float (training), runs the fused
-Pallas kernel over packed posit codes (serving), or runs the bit-exact
-chunked-PDPU kernel (validation).  All plans keep the PDPU contract —
+Pallas kernel over posit codes (serving — weights packed, and activations
+too when the policy sets an activation format), or runs the bit-exact
+chunked-PDPU kernel (validation).  Both fake_quant and fused are trainable:
+the fused plan carries a custom_vjp STE backward, so QAT can run the packed
+kernel forward end to end.  All plans keep the PDPU contract —
 low-precision posit operands, wide f32 accumulation.
 
 Attention is a flash-style streaming softmax over KV chunks (lax.scan), so
@@ -240,7 +243,9 @@ def embed_tokens(emb, tokens, cfg: ModelConfig):
 
 def logits_head(x, emb_or_head, cfg: ModelConfig, transpose: bool):
     # the head historically quantizes only the weights — final hidden states
-    # reach the vocab projection unquantized regardless of the policy
+    # reach the vocab projection unquantized regardless of the policy (under
+    # activation-coded fused serving the head therefore takes the
+    # float-activation fast path while the trunk runs both operands coded)
     policy = cfg.quant
     if policy.activations is not None:
         policy = dataclasses.replace(policy, activations=None)

@@ -15,6 +15,16 @@ one in-kernel decode, end to end.  This includes MoE expert stacks: packed
 `we_*` weights restore as [.., E, K, N] code arrays and run through the
 grouped fused kernel (kernels/dispatch.qdot_grouped), so EP serving reads
 expert weights at int8/int16 width too.
+
+Activation-coded fused serving: a policy with `activations` set (e.g.
+`serve_fused_p16_a13`, or any policy via
+`QuantPolicy.with_serving_activations`) makes every matmul run the
+both-operands `fused_matmul` path — activations are encoded to posit codes
+and decoded inside the kernel next to the weights, so both GEMM operands
+travel at code width (int8/int16) instead of f32.  The trade is one extra
+rounding per activation element for halved/quartered operand bandwidth;
+benchmarks/bench_exec_paths.py measures it.  `execution_summary()` reports
+which datapath an engine is actually running.
 """
 from __future__ import annotations
 
@@ -110,6 +120,20 @@ class ServingEngine:
         """Allocated KV/state cache bytes for the current slot configuration."""
         return int(sum(v.nbytes for v in jax.tree.leaves(self.cache)))
 
+    def execution_summary(self) -> dict:
+        """Which datapath this engine serves on, plus its storage terms."""
+        q = self.cfg.quant
+        return {
+            "execution": q.execution,
+            "weights": str(q.weights) if q.weights else None,
+            "activations": str(q.activations) if q.activations else None,
+            "kv_cache": str(q.kv_cache) if q.kv_cache else None,
+            "activation_coded": q.execution == "fused"
+                                and q.activations is not None,
+            "weight_bytes": self.weight_bytes(),
+            "kv_cache_bytes": self.kv_cache_bytes(),
+        }
+
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         req.out_tokens = []
@@ -117,21 +141,29 @@ class ServingEngine:
 
     def _fill_slots(self):
         for slot in range(self.B):
-            if not self.slot_free[slot] or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            logits, cache1 = self._prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt[None])})
-            # splice single-row cache into this slot
-            self.cache = jax.tree.map(
-                lambda full, one, bdim: _slot_update(full, one, slot, bdim),
-                self.cache, cache1, self.cache_bdim)
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.out_tokens.append(tok)
-            self.next_token[slot] = tok
-            self.slot_free[slot] = False
-            self.slot_req[slot] = req
-            self.slot_remaining[slot] = req.max_new_tokens - 1
+            # a request can finish at prefill (first token == eos, or
+            # max_new_tokens == 1): it must not occupy the slot burning
+            # decode steps until slot_remaining drains — complete it here
+            # and keep pulling from the queue until a surviving request
+            # actually occupies the slot
+            while self.slot_free[slot] and self.queue:
+                req = self.queue.pop(0)
+                logits, cache1 = self._prefill(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None])})
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.out_tokens.append(tok)
+                if req.max_new_tokens <= 1 or (
+                        req.eos_id is not None and tok == req.eos_id):
+                    self.done.append(req)  # finished at prefill: the slot
+                    continue               # stays free, no cache splice
+                # splice single-row cache into this slot
+                self.cache = jax.tree.map(
+                    lambda full, one, bdim: _slot_update(full, one, slot, bdim),
+                    self.cache, cache1, self.cache_bdim)
+                self.next_token[slot] = tok
+                self.slot_free[slot] = False
+                self.slot_req[slot] = req
+                self.slot_remaining[slot] = req.max_new_tokens - 1
 
     def _retire(self, slot: int):
         req = self.slot_req[slot]

@@ -72,7 +72,14 @@ def loss_fn(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
 
 
 def make_train_step(cfg: ModelConfig, opt: Optimizer, accum: int = 1):
-    """Returns train_step(state, batch) -> (state', metrics)."""
+    """Returns train_step(state, batch) -> (state', metrics).
+
+    The execution plan in cfg.quant decides which GEMM datapath the
+    fwd+bwd runs: fake_quant (STE on float dots) or fused (the packed
+    Pallas kernel forward with a custom_vjp STE backward — QAT on the
+    real serving datapath).  Non-trainable plans are rejected up front.
+    """
+    cfg.quant.require_trainable()
 
     def train_step(state: TrainState, batch):
         B = batch["labels"].shape[0]
@@ -135,6 +142,7 @@ def make_train_step_compressed(cfg: ModelConfig, opt: Optimizer, mesh,
     from repro.core.formats import P8_2
     from repro.optim import compress
 
+    cfg.quant.require_trainable()
     fmt = fmt or P8_2
 
     def local_grads(params, batch):

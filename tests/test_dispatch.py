@@ -298,6 +298,109 @@ def test_packed_serve_matches_in_memory_packed(rng, tmp_path):
     assert out_mem == out_ckpt
 
 
+def test_engine_activation_coded_serving(rng, tmp_path):
+    """A serving policy with activations=posit(n,es) runs the both-operands
+    fused kernel at engine level: finite logits, parity with the qdot-level
+    path (api.apply routes every matmul through dispatch -> fused_matmul),
+    and end-to-end continuous batching."""
+    from repro.checkpoint import CheckpointManager
+    from repro.models import api
+    from repro.serve import Request, ServingEngine
+
+    cfg = _tiny_cfg(policy_by_name("serve_fused_p16_a13"))
+    params = api.init(jax.random.key(4), cfg)
+    packed = api.pack_params(params, cfg)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, packed, extra=api.pack_manifest(cfg))
+    engine = ServingEngine.from_checkpoint(cfg, str(tmp_path),
+                                           batch_slots=2, max_seq=24)
+    summary = engine.execution_summary()
+    assert summary["execution"] == "fused"
+    assert summary["activation_coded"] is True
+    assert summary["activations"] == str(P13_2)
+
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 6)), jnp.int32)
+    logits, _ = engine._prefill(engine.params, {"tokens": tokens})
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    want = api.apply(engine.params, {"tokens": tokens}, cfg)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-4, atol=1e-5)
+
+    for i in range(3):
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+            max_new_tokens=4))
+    done = engine.run()
+    assert len(done) == 3
+    assert all(0 <= t < cfg.vocab_size
+               for r in done for t in r.out_tokens)
+
+
+def test_qdot_act_coded_matches_fused_matmul_kernel(rng):
+    """Dispatch under an activation-coded serving policy is exactly the
+    both-operands fused kernel, code for code."""
+    from repro.kernels import ops
+
+    x = jnp.asarray(rng.normal(0, 1, (5, 24)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (24, 12)).astype(np.float32))
+    policy = policy_by_name("serve_fused_p16_a13")
+    w_codes = posit.pack(w, P16_2)
+    got = dispatch.qdot(x, w_codes, policy, out_dtype=jnp.float32)
+    want = ops.fused_matmul(ops.encode(x, P13_2), w_codes, P13_2, P16_2,
+                            fmt_out=None)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def _serve_engine(cfg, params, slots=1):
+    from repro.serve import ServingEngine
+    return ServingEngine(cfg, params, batch_slots=slots, max_seq=32)
+
+
+def test_prefill_eos_retires_slot_immediately(rng):
+    """A request whose prefill-produced first token is already eos must
+    retire at fill time — not burn decode steps until slot_remaining
+    drains — and its slot must refill from the queue in the same pass."""
+    from repro.models import api
+    from repro.serve import Request
+
+    cfg = _tiny_cfg(policy_by_name("serve_fused_p16"))
+    params = api.pack_params(api.init(jax.random.key(0), cfg), cfg)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+
+    # learn the deterministic greedy first token for this prompt
+    probe = _serve_engine(cfg, params)
+    probe.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
+    first_tok = probe.run()[0].out_tokens[0]
+
+    # two requests through ONE slot, both ending at prefill: a single
+    # engine.step() must finish both without any decode step
+    engine = _serve_engine(cfg, params, slots=1)
+    for i in range(2):
+        engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=8,
+                              eos_id=int(first_tok)))
+    assert engine.step() is False  # fill retired everything; no decode ran
+    assert len(engine.done) == 2
+    assert all(r.out_tokens == [first_tok] for r in engine.done)
+    assert engine.queue == [] and all(engine.slot_free)
+
+
+def test_prefill_max_new_tokens_one_retires_at_fill(rng):
+    """max_new_tokens=1 is satisfied by the prefill token alone; the slot
+    must not run a decode step (which would append a second token)."""
+    from repro.models import api
+    from repro.serve import Request
+
+    cfg = _tiny_cfg(policy_by_name("serve_fused_p16"))
+    params = api.pack_params(api.init(jax.random.key(0), cfg), cfg)
+    engine = _serve_engine(cfg, params)
+    engine.submit(Request(
+        rid=0, prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+        max_new_tokens=1))
+    done = engine.run()
+    assert len(done) == 1 and len(done[0].out_tokens) == 1
+
+
 def test_unpack_params_inverts_to_quantized_masters(rng):
     """unpack(pack(w)) == quantize(w): the packed checkpoint holds exactly
     the quantized weights, no second rounding."""

@@ -1,0 +1,264 @@
+"""Kernel-in-the-loop QAT: the fused plan's custom_vjp STE gradients.
+
+The fused execution plan's forward runs the packed Pallas kernel (encode ->
+in-kernel decode -> wide f32 MXU accumulate); its backward is straight-
+through w.r.t. the float activations and weight masters, computed on the
+decoded quantized operands.  That is exactly what the fake_quant STE plan
+back-propagates, so gradients must agree — at qdot level bit-for-bit, at
+model level up to the reduction-order noise of the differing forwards.
+
+bit_exact stays forward-only: `jax.grad` through it must raise a clear
+error (dispatch grad barrier) and the train-step factories must reject it
+up front (QuantPolicy.require_trainable).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.formats import P8_2, P13_2, P16_2
+from repro.core.quant import (PLAN_TABLE, TRAINABLE_PLANS, QuantPolicy,
+                              policy_by_name)
+from repro.kernels import dispatch
+
+
+@pytest.fixture
+def xw(rng):
+    x = jnp.asarray(rng.normal(0, 1, (3, 5, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (40, 24)).astype(np.float32))
+    return x, w
+
+
+@pytest.fixture
+def exw(rng):
+    x = jnp.asarray(rng.normal(0, 1, (4, 6, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (4, 40, 24)).astype(np.float32))
+    return x, w
+
+
+def _grads(fn, *args):
+    return jax.grad(lambda *a: fn(*a).sum(), argnums=(0, 1))(*args)
+
+
+# ---------------------------------------------------------------------------
+# qdot-level gradient parity: fused STE == fake_quant STE
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("acts", [None, P13_2],
+                         ids=["float_act", "act_coded"])
+def test_dense_fused_grads_match_fake_quant(xw, acts):
+    """Both STE backwards are g @ wq^T / xq^T @ g on the same decoded
+    quantized operands — identical cotangents."""
+    x, w = xw
+    policy = QuantPolicy(weights=P16_2, activations=acts)
+    gx_f, gw_f = _grads(lambda a, b: dispatch.qdot(a, b, policy), x, w)
+    fused = policy.with_execution("fused")
+    gx_k, gw_k = _grads(lambda a, b: dispatch.qdot(a, b, fused), x, w)
+    np.testing.assert_allclose(np.asarray(gx_f), np.asarray(gx_k),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(gw_f), np.asarray(gw_k),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("acts", [None, P13_2],
+                         ids=["float_act", "act_coded"])
+def test_grouped_fused_grads_match_fake_quant(exw, acts):
+    x, w = exw
+    policy = QuantPolicy(weights=P16_2, activations=acts)
+    gx_f, gw_f = _grads(lambda a, b: dispatch.qdot_grouped(a, b, policy),
+                        x, w)
+    fused = policy.with_execution("fused")
+    gx_k, gw_k = _grads(lambda a, b: dispatch.qdot_grouped(a, b, fused),
+                        x, w)
+    np.testing.assert_allclose(np.asarray(gx_f), np.asarray(gx_k),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(gw_f), np.asarray(gw_k),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_grouped_4d_fused_grads_match_fake_quant(rng):
+    """GShard-grouped [B, E, Cg, K] activations: the batch-dim fold/unfold
+    around the STE kernel is linear, so gradients still match."""
+    x = jnp.asarray(rng.normal(0, 1, (2, 3, 4, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (3, 16, 8)).astype(np.float32))
+    policy = QuantPolicy(weights=P16_2, activations=P13_2)
+    gx_f, gw_f = _grads(lambda a, b: dispatch.qdot_grouped(a, b, policy),
+                        x, w)
+    fused = policy.with_execution("fused")
+    gx_k, gw_k = _grads(lambda a, b: dispatch.qdot_grouped(a, b, fused),
+                        x, w)
+    np.testing.assert_allclose(np.asarray(gx_f), np.asarray(gx_k),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(gw_f), np.asarray(gw_k),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_fused_grads_flow_through_bf16_casts(xw):
+    """Model activations arrive in the compute dtype; the dispatch-level
+    casts around the f32-only STE kernel must carry cotangents back."""
+    x, w = xw
+    x = x.astype(jnp.bfloat16)
+    policy = QuantPolicy(weights=P16_2, activations=P13_2, execution="fused")
+    gx, gw = _grads(lambda a, b: dispatch.qdot(a, b, policy)
+                    .astype(jnp.float32), x, w)
+    assert gx.dtype == jnp.bfloat16 and gw.dtype == jnp.float32
+    assert np.isfinite(np.asarray(gx, np.float32)).all()
+    assert np.isfinite(np.asarray(gw)).all()
+
+
+# ---------------------------------------------------------------------------
+# model-level QAT: jax.grad through a fused-plan train step
+# ---------------------------------------------------------------------------
+
+
+def _dense_cfg(quant):
+    from repro import configs
+    return configs.get_smoke("command_r_35b").replace(
+        n_layers=1, d_model=16, n_heads=2, n_kv_heads=1, head_dim=8,
+        d_ff=32, vocab_size=64, quant=quant)
+
+
+def _moe_cfg(quant):
+    from repro import configs
+    return configs.get_smoke("qwen3_moe_235b").replace(
+        n_layers=1, d_model=16, n_heads=2, n_kv_heads=1, head_dim=8,
+        vocab_size=64, n_experts=4, top_k=2, moe_d_ff=8, quant=quant)
+
+
+def _loss_grads(cfg, batch):
+    from repro.models import api
+    from repro.train import step as step_lib
+
+    params = api.init(jax.random.key(0), cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: step_lib.loss_fn(p, batch, cfg)[0])(params)
+    return float(loss), grads
+
+
+@pytest.mark.parametrize("make_cfg", [_dense_cfg, _moe_cfg],
+                         ids=["dense", "moe_grouped"])
+def test_model_qat_grads_fused_vs_fake_quant(rng, make_cfg):
+    """jax.grad through the whole LM loss succeeds on the fused plan and
+    matches fake_quant within reduction-order tolerance (the two forwards
+    differ only in f32 association order, the backwards are identical)."""
+    policy = QuantPolicy(weights=P16_2, activations=P13_2)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32),
+    }
+    loss_f, g_fake = _loss_grads(make_cfg(policy), batch)
+    loss_k, g_fused = _loss_grads(make_cfg(policy.with_execution("fused")),
+                                  batch)
+    assert np.isfinite(loss_k)
+    assert abs(loss_f - loss_k) < 1e-4 * max(1.0, abs(loss_f))
+    for a, b in zip(jax.tree.leaves(g_fake), jax.tree.leaves(g_fused)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=1e-5)
+
+
+def test_train_step_runs_on_fused_plan(rng):
+    """make_train_step under execution='fused': one full optimizer step —
+    the QAT loop trains on the packed-kernel forward end to end."""
+    from repro.optim import adamw, cosine_schedule
+    from repro.train import step as step_lib
+
+    cfg = _dense_cfg(QuantPolicy(weights=P16_2, activations=P13_2,
+                                 execution="fused"))
+    opt = adamw(cosine_schedule(1e-3, warmup=1, total=4))
+    train_step = jax.jit(step_lib.make_train_step(cfg, opt, accum=2))
+    state = step_lib.init_state(jax.random.key(0), cfg, opt)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 8)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 8)),
+                              jnp.int32),
+    }
+    state1, metrics = train_step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         state.params, state1.params)
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# bit_exact is forward-only: clear errors, not silent zeros
+# ---------------------------------------------------------------------------
+
+
+def _bit_exact_policy():
+    return QuantPolicy(weights=P13_2, activations=P13_2,
+                       execution="bit_exact", pdpu_n=4)
+
+
+def test_bit_exact_grad_raises_dense(xw):
+    x, w = xw
+    policy = _bit_exact_policy()
+    with pytest.raises(ValueError, match="not differentiable"):
+        jax.grad(lambda a: dispatch.qdot(a, w, policy).sum())(x)
+    with pytest.raises(ValueError, match="trainable plans"):
+        jax.grad(lambda b: dispatch.qdot(x, b, policy).sum())(w)
+    # the forward itself stays usable (validation plan)
+    assert dispatch.qdot(x, w, policy).shape == x.shape[:-1] + (w.shape[-1],)
+
+
+def test_bit_exact_grad_raises_grouped(exw):
+    x, w = exw
+    policy = _bit_exact_policy()
+    with pytest.raises(ValueError, match="not differentiable"):
+        jax.grad(lambda a: dispatch.qdot_grouped(a, w, policy).sum())(x)
+    assert dispatch.qdot_grouped(x, w, policy).shape == (4, 6, 24)
+
+
+def test_packed_act_coded_grad_raises(xw, exw):
+    """Activation-coded fused over packed int weights has no activation
+    backward (the encode drops tangents): a clear error, not silent
+    zeros.  The float-activation packed path keeps its exact gradient."""
+    from repro.core import posit
+
+    x, w = xw
+    policy = policy_by_name("serve_fused_p16_a13")
+    w_codes = posit.pack(w, P16_2)
+    with pytest.raises(ValueError, match="packed int weights"):
+        jax.grad(lambda a: dispatch.qdot(a, w_codes, policy).sum())(x)
+    xg, wg = exw
+    with pytest.raises(ValueError, match="packed int weights"):
+        jax.grad(lambda a: dispatch.qdot_grouped(
+            a, posit.pack(wg, P16_2), policy).sum())(xg)
+    # float activations over packed weights stay differentiable (plain
+    # decode + dot), and forward-only act-coded serving stays usable
+    float_pol = policy_by_name("serve_fused_p16")
+    gx = jax.grad(lambda a: dispatch.qdot(a, w_codes, float_pol).sum())(x)
+    assert np.isfinite(np.asarray(gx)).all()
+    assert dispatch.qdot(x, w_codes, policy).shape == x.shape[:-1] + (24,)
+
+
+def test_train_step_rejects_bit_exact():
+    """The factories fail fast — before any tracing — with the same
+    trainability rule the dispatch barrier enforces lazily."""
+    from repro.optim import adamw, cosine_schedule
+    from repro.train import step as step_lib
+
+    cfg = _dense_cfg(_bit_exact_policy())
+    opt = adamw(cosine_schedule(1e-3, warmup=1, total=4))
+    with pytest.raises(ValueError, match="not differentiable"):
+        step_lib.make_train_step(cfg, opt)
+
+
+def test_plan_table_and_trainability_knobs():
+    assert set(PLAN_TABLE) == {"fake_quant", "fused", "bit_exact"}
+    assert TRAINABLE_PLANS == ("fake_quant", "fused")
+    assert QuantPolicy(weights=P16_2, execution="fused").trainable
+    assert not _bit_exact_policy().trainable
+    with pytest.raises(ValueError, match="trainable plans"):
+        _bit_exact_policy().require_trainable()
+    # require_trainable chains for the policy-construction idiom
+    p = QuantPolicy(weights=P16_2).require_trainable()
+    assert p.execution == "fake_quant"
+
+
+def test_with_serving_activations_knob():
+    p = policy_by_name("serve_fused_p16").with_serving_activations(P13_2)
+    assert p.execution == "fused" and p.activations == P13_2
+    assert p.weights == P16_2 and p.kv_cache == P8_2
+    assert p == policy_by_name("serve_fused_p16_a13")
