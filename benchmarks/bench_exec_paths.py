@@ -16,7 +16,7 @@ fake_quant and fused run on a smoke config; bit_exact is O(M*N*K) select
 chains (VPU-bound by design), so it runs on a micro config — the point is
 plan parity and relative cost, not absolute numbers.
 
-Two further sections:
+Three further sections:
 
   activation-coded serving : float-activation fused vs both-operands fused
                      (QuantPolicy.with_serving_activations) — the
@@ -28,6 +28,15 @@ Two further sections:
                      plus the max relative grad deviation between the two
                      STE datapaths (they compute on identical quantized
                      operands, so this is reduction-order noise).
+  paged serving    : the paged posit-KV runtime vs the dense cache on a
+                     mixed-length request queue — greedy token parity per
+                     family (transformer / mamba / hybrid) and the KV
+                     storage ratio: dense f32 `batch x max_seq` allocation
+                     vs P(16,1)-coded pages actually backing tokens in
+                     flight (must be >= 2x smaller).
+
+Results are also written as machine-readable BENCH_exec_paths.json
+(latency + storage per plan; the CI artifact).
 
     PYTHONPATH=src python benchmarks/bench_exec_paths.py
 """
@@ -38,15 +47,15 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from benchmarks.timing import time_ms
+    from benchmarks.timing import time_ms, write_bench_json
     from benchmarks.act_serving import act_checks, bench_act_serving, \
         print_act_rows
 except ImportError:  # bare-script run: benchmarks/ itself is sys.path[0]
-    from timing import time_ms
+    from timing import time_ms, write_bench_json
     from act_serving import act_checks, bench_act_serving, print_act_rows
 from repro import configs
 from repro.core.quant import QuantPolicy
-from repro.core.formats import P13_2, P16_2, P8_2
+from repro.core.formats import P13_2, P16_1, P16_2, P8_2
 from repro.models import api
 
 
@@ -93,6 +102,63 @@ def bench_train_qat(micro, B=2, S=16, reps=2):
     return rows, max(jax.tree.leaves(diffs))
 
 
+def bench_paged_serving(rng):
+    """Paged posit-KV runtime vs dense cache on a mixed-length queue:
+    greedy token parity per family + the decode-state storage ratio.
+
+    The dense reference runs token-by-token prefill (buckets=(1,)), so the
+    comparison crosses both the cache layout (pages vs rows) and the chunk
+    decomposition — for the SSM/hybrid families that pins the chunked SSD
+    recurrence, not just the attention path."""
+    from repro.serve import Request, ServingEngine
+
+    def serve(cfg, params, prompts, buckets=(16, 4, 1), **kw):
+        eng = ServingEngine(cfg, params, batch_slots=4, max_seq=96,
+                            prefill_buckets=buckets, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=8))
+        out = {r.rid: r.out_tokens for r in eng.run()}
+        return out, eng
+
+    lengths = [8, 13, 20, 6, 16, 9]  # the mixed-length queue
+    parity = {}
+    for arch in ("command_r_35b", "mamba2_1_3b", "jamba_1_5_large"):
+        cfg = configs.get_tiny_serving(arch, QuantPolicy(weights=P16_2,
+                                                         kv_cache=P16_1))
+        params = api.init(jax.random.key(0), cfg)
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in lengths]
+        out_paged, _ = serve(cfg, params, prompts, page_size=16)
+        out_dense, _ = serve(cfg, params, prompts, paged=False,
+                             buckets=(1,))
+        parity[cfg.family] = out_paged == out_dense
+
+    # storage: dense f32 KV allocation vs P(16,1)-coded pages in flight
+    cfg_f32 = configs.get_smoke("command_r_35b").replace(
+        quant=QuantPolicy(weights=P16_2))          # kv_cache=None -> f32 KV
+    cfg_paged = cfg_f32.replace(
+        quant=QuantPolicy(weights=P16_2, kv_cache=P16_1, kv_page_size=16))
+    params = api.init(jax.random.key(0), cfg_f32)
+    prompts = [rng.integers(0, cfg_f32.vocab_size, n).astype(np.int32)
+               for n in lengths]
+    _, eng_dense = serve(cfg_f32, params, prompts, paged=False)
+    _, eng_paged = serve(cfg_paged, params, prompts)
+    dense_kv = eng_dense.kv_cache_summary()["kv_bytes"]
+    paged_peak = eng_paged.kv_cache_summary()["kv_bytes_peak"]
+    return {
+        "queue_prompt_lengths": lengths,
+        "token_parity_paged_vs_dense": parity,
+        "dense_reference_prefill_buckets": [1],
+        "dense_f32_kv_bytes": dense_kv,
+        "paged_p16_1_peak_kv_bytes": paged_peak,
+        "kv_storage_ratio": dense_kv / paged_peak,
+        "page_size": 16,
+        "kv_page_format": str(P16_1),
+        "peak_pages_in_use": eng_paged.allocator.peak_in_use,
+        "pages_capacity": eng_paged.allocator.capacity,
+    }
+
+
 def main():
     rng = np.random.default_rng(0)
     rows = []
@@ -128,6 +194,16 @@ def main():
         print(f"{name},{plan},{B},{S},{ms:.1f},{loss:.4f}")
     print(f"max relative grad deviation fused vs fake_quant: {grad_dev:.3e}")
 
+    # paged posit-KV serving: per-family parity + the storage win
+    paged = bench_paged_serving(rng)
+    print("\npaged serving (mixed-length queue "
+          f"{paged['queue_prompt_lengths']}):")
+    print(f"  token parity paged==dense: {paged['token_parity_paged_vs_dense']}")
+    print(f"  dense f32 kv bytes: {paged['dense_f32_kv_bytes']}  "
+          f"paged {paged['kv_page_format']} peak kv bytes: "
+          f"{paged['paged_p16_1_peak_kv_bytes']}  "
+          f"ratio: {paged['kv_storage_ratio']:.2f}x")
+
     by_plan = {r[1]: r for r in rows[:2]}
     f32_w = by_plan["fake_quant"][5]
     packed_w = by_plan["fused"][5]
@@ -138,8 +214,30 @@ def main():
         **act_checks(act_rows),
         # the two STE datapaths back-propagate the same quantized operands
         "qat_grads_match": grad_dev < 1e-2,
+        # paged posit-KV decode: token parity on every family, and the
+        # coded pages in flight beat the dense f32 allocation >= 2x
+        "paged_token_parity": all(
+            paged["token_parity_paged_vs_dense"].values()),
+        "paged_kv_storage_2x": paged["kv_storage_ratio"] >= 2.0,
     }
     print("checks:", checks)
+    write_bench_json("exec_paths", {
+        "plans": [dict(zip(("model", "plan", "batch", "seq", "forward_ms",
+                            "weight_bytes", "kv_cache_bytes"), r))
+                  for r in rows],
+        "act_serving": [dict(zip(("model", "act_mode", "batch", "seq",
+                                  "forward_ms", "act_bytes_per_elem",
+                                  "logits_rmse_vs_float_act"), r))
+                        for r in act_rows],
+        "qat": {
+            "rows": [dict(zip(("model", "plan", "batch", "seq",
+                               "train_step_ms", "loss"), r))
+                     for r in qat_rows],
+            "max_rel_grad_deviation": grad_dev,
+        },
+        "paged_serving": paged,
+        "checks": checks,
+    })
     assert all(checks.values()), checks
 
 

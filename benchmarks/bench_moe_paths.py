@@ -21,6 +21,9 @@ fused kernel as posit codes alongside the packed weights — both GEMM
 operands at code width — reporting the logits RMSE against the
 float-activation reference (the accuracy/bandwidth trade on the MoE path).
 
+Results are also written as machine-readable BENCH_moe_paths.json
+(latency + storage per plan; the CI artifact).
+
     PYTHONPATH=src python benchmarks/bench_moe_paths.py
 """
 from __future__ import annotations
@@ -30,11 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from benchmarks.timing import time_ms
+    from benchmarks.timing import time_ms, write_bench_json
     from benchmarks.act_serving import act_checks, bench_act_serving, \
         print_act_rows
 except ImportError:  # bare-script run: benchmarks/ itself is sys.path[0]
-    from timing import time_ms
+    from timing import time_ms, write_bench_json
     from act_serving import act_checks, bench_act_serving, print_act_rows
 from repro import configs
 from repro.core.formats import P13_2, P16_2, P8_2
@@ -106,6 +109,17 @@ def main():
         **act_checks(act_rows),
     }
     print("checks:", checks)
+    write_bench_json("moe_paths", {
+        "plans": [dict(zip(("model", "plan", "dispatch", "batch", "seq",
+                            "forward_ms", "expert_weight_bytes",
+                            "total_weight_bytes"), r))
+                  for r in rows],
+        "act_serving": [dict(zip(("model", "act_mode", "batch", "seq",
+                                  "forward_ms", "act_bytes_per_elem",
+                                  "logits_rmse_vs_float_act"), r))
+                        for r in act_rows],
+        "checks": checks,
+    })
     assert all(checks.values()), checks
 
 

@@ -1,6 +1,8 @@
-"""Shared wall-clock helper for the model-level benchmarks."""
+"""Shared wall-clock + machine-readable-output helpers for the benchmarks."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -13,3 +15,15 @@ def time_ms(fn, *args, reps: int = 3) -> float:
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e3
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """Dump a benchmark's results as BENCH_<name>.json (latency + storage
+    per plan — the machine-readable record CI archives next to the logs).
+    BENCH_OUTPUT_DIR overrides the destination directory (default: CWD)."""
+    out_dir = os.environ.get("BENCH_OUTPUT_DIR", ".")
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    print(f"wrote {path}")
+    return path

@@ -1,20 +1,24 @@
-"""Serving with posit-packed weights + posit KV cache (continuous batching).
+"""Serving with posit-packed weights + a paged posit-KV cache.
 
-End-to-end demonstration of the execution-plan architecture:
+End-to-end demonstration of the paged serving runtime:
   1. a float checkpoint's qdot weights are packed once to P(16,2) codes
      (int16 — half the bf16 bytes, quarter the f32 bytes),
   2. the packed tree is checkpointed with pack metadata in the manifest,
   3. `ServingEngine.from_checkpoint` restores the codes and serves them
-     through the *fused* Pallas GEMM (in-kernel decode, wide f32 MXU
-     accumulate — the PDPU datapath on the model hot path), with the KV
-     cache stored as P(8,2) codes decoded exactly on read,
+     through the *fused* Pallas GEMM, with the KV cache held as
+     **posit-coded pages**: prompts prefill in bucketed chunks straight
+     into block-table pages, decode attends them through the Pallas
+     paged-attention kernel (block-table gather + in-kernel posit decode),
+     and retired requests hand their pages back to the free list,
   4. the same checkpoint is re-served *activation-coded*
-     (`serve_fused_p16_a13`): activations are encoded to P(13,2) too, so
-     both GEMM operands run through the both-operands fused kernel at
-     int16 width — the accuracy/bandwidth serving knob.
+     (`serve_fused_p16_a13`): both GEMM operands run at int16 code width.
+
+SERVE_DEMO_REQUESTS / SERVE_DEMO_TOKENS shrink the demo (the CI smoke step
+runs a few decode steps on CPU, interpret mode).
 
     PYTHONPATH=src python examples/serve_posit_lm.py
 """
+import os
 import tempfile
 import time
 
@@ -26,6 +30,9 @@ from repro.checkpoint import CheckpointManager
 from repro.core.quant import policy_by_name
 from repro.models import api
 from repro.serve import Request, ServingEngine
+
+N_REQ = int(os.environ.get("SERVE_DEMO_REQUESTS", "10"))
+MAX_NEW = int(os.environ.get("SERVE_DEMO_TOKENS", "12"))
 
 cfg = configs.get_smoke("command_r_35b").replace(
     quant=policy_by_name("serve_fused_p16"))
@@ -42,37 +49,57 @@ with tempfile.TemporaryDirectory() as ckpt_dir:
     mgr = CheckpointManager(ckpt_dir)
     mgr.save(0, packed, extra=api.pack_manifest(cfg))
     engine = ServingEngine.from_checkpoint(cfg, ckpt_dir,
-                                           batch_slots=4, max_seq=96)
-    print(f"engine resident: {engine.weight_bytes()} B weights, "
-          f"{engine.kv_cache_bytes()} B kv cache (P(8,2) codes)")
+                                           batch_slots=4, max_seq=96,
+                                           page_size=16)
+    kv = engine.kv_cache_summary()
+    print(f"engine resident: {engine.weight_bytes()} B weights; paged KV "
+          f"pool {kv['kv_bytes']} B ({engine.cache['k'].dtype} codes, "
+          f"page_size={engine.layout.page_size}) + {kv['metadata_bytes']} B "
+          f"block-table/position metadata")
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
-               for _ in range(10)]
+               for _ in range(N_REQ)]
     for i, p in enumerate(prompts):
-        engine.submit(Request(rid=i, prompt=p, max_new_tokens=12))
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW))
     t0 = time.perf_counter()
+    # step once to catch the pool mid-flight, then drain
+    engine.step()
+    mid = engine.kv_cache_summary()
+    print(f"mid-flight: {engine.pages_in_use} pages in use / "
+          f"{engine.pages_free} free "
+          f"({mid['kv_bytes_in_use']} B of coded KV backing tokens)")
     done = engine.run()
     dt = time.perf_counter() - t0
+
+    # coded-page storage ratio: what the dense f32 worst-case cache would
+    # allocate vs the coded pages that peak traffic actually touched
+    dense_f32 = 2 * cfg.n_layers * engine.B * engine.S \
+        * cfg.n_kv_heads * cfg.head_dim * 4
+    peak = engine.kv_cache_summary()["kv_bytes_peak"]
+    print(f"decode-state storage: dense f32 would allocate {dense_f32} B; "
+          f"peak coded pages in flight {peak} B "
+          f"({dense_f32 / peak:.1f}x smaller)")
 
     # activation-coded serving: same packed checkpoint, activations now
     # travel as P(13,2) codes through the both-operands fused kernel
     cfg_act = cfg.replace(quant=policy_by_name("serve_fused_p16_a13"))
     engine_act = ServingEngine.from_checkpoint(cfg_act, ckpt_dir,
                                                batch_slots=4, max_seq=96)
-    for i, p in enumerate(prompts[:4]):
-        engine_act.submit(Request(rid=i, prompt=p, max_new_tokens=12))
+    n_act = min(4, N_REQ)
+    for i, p in enumerate(prompts[:n_act]):
+        engine_act.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW))
     done_act = engine_act.run()
 
 tok = sum(len(r.out_tokens) for r in done)
 print(f"served {len(done)} requests / {tok} tokens in {dt:.2f}s "
       f"({tok/dt:.1f} tok/s on CPU, Pallas interpret mode)")
 print(f"execution plan: {cfg.quant.execution} "
-      f"(weights {cfg.quant.weights}, kv {cfg.quant.kv_cache})")
-print(f"kv cache dtype: {engine.cache['k'].dtype} (posit P(8,2) codes)")
+      f"(weights {cfg.quant.weights}, kv {cfg.quant.kv_cache}, "
+      f"pages reclaimed: {engine.pages_free}/{engine.allocator.capacity} free)")
 print(f"sample continuation: {done[0].out_tokens}")
 print(f"activation-coded plan: {engine_act.execution_summary()}")
-match = sum(a.out_tokens == b.out_tokens
-            for a, b in zip(done[:4], done_act)) / len(done_act)
+by_rid = {r.rid: r.out_tokens for r in done}
+match = sum(by_rid[r.rid] == r.out_tokens for r in done_act) / len(done_act)
 print(f"activation-coded vs float-activation continuations: "
       f"{match:.0%} identical over {len(done_act)} requests "
       f"(both operands int16 codes vs f32 activations)")

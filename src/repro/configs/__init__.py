@@ -41,6 +41,26 @@ def get_smoke(name: str):
     return _module(name).SMOKE
 
 
+def get_tiny_serving(name: str, quant=None):
+    """Reduced-further smoke config for fast CPU serving parity checks
+    (shared by tests/test_paged_serving.py and the exec-path benchmark so
+    both always measure the same geometry)."""
+    cfg = get_smoke(name)
+    shrink = {
+        "command_r_35b": dict(n_layers=1, d_model=16, n_heads=2,
+                              n_kv_heads=1, head_dim=8, d_ff=32,
+                              vocab_size=64),
+        "mamba2_1_3b": dict(n_layers=1, vocab_size=64),
+        "jamba_1_5_large": dict(n_layers=2, d_model=32, d_ff=48,
+                                moe_d_ff=48, vocab_size=64),
+        "qwen3_moe_235b": dict(n_layers=1, d_model=32, n_experts=4,
+                               top_k=2, moe_d_ff=16, vocab_size=64),
+    }.get(_ALIASES.get(name, name), {})
+    if quant is not None:
+        shrink["quant"] = quant
+    return cfg.replace(**shrink)
+
+
 def shape_skips(name: str) -> dict:
     """shape_name -> reason, for cells this arch skips by assignment rule."""
     return getattr(_module(name), "SHAPE_SKIPS", {})

@@ -82,6 +82,7 @@ class PositFormat:
 
 # The formats the paper uses in Table I, importable by name.
 P16_2 = PositFormat(16, 2)
+P16_1 = PositFormat(16, 1)   # paged-KV storage format (serving runtime)
 P13_2 = PositFormat(13, 2)
 P10_2 = PositFormat(10, 2)
 P8_2 = PositFormat(8, 2)

@@ -40,7 +40,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from .formats import PositFormat, PDPUConfig, P16_2, P13_2, P8_2
+from .formats import PositFormat, PDPUConfig, P16_2, P16_1, P13_2, P8_2
 from . import posit
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +88,11 @@ class QuantPolicy:
                   kernels/dispatch.py): 'fake_quant' | 'fused' |
                   'bit_exact'.  fake_quant and fused are trainable (both
                   carry STE backwards); bit_exact is forward-only.
+    kv_page_size : tokens per KV page when serving with a paged cache
+                  (models/paged.py): the KV pool is [n_pages, kv_page_size,
+                  Hkv*Dh] at `kv_cache` code width and the Pallas paged-
+                  attention kernel gathers/decodes pages by block table.
+                  Dense serving ignores it.
     pdpu_n, pdpu_w_m : chunk size and alignment width of the PDPU instance
                   used by the 'bit_exact' plan (paper Table I knobs).
     """
@@ -98,6 +103,7 @@ class QuantPolicy:
     grad_allreduce: Optional[PositFormat] = None
     accum_dtype: jnp.dtype = jnp.float32
     execution: str = "fake_quant"
+    kv_page_size: int = 16
     pdpu_n: int = 4
     pdpu_w_m: int = 14
 
@@ -185,6 +191,11 @@ SERVE_FUSED_P16 = QuantPolicy(weights=P16_2, kv_cache=P8_2, execution="fused")
 # both-operands fused kernel (the accuracy/bandwidth trade — one extra
 # rounding per activation element for int16 instead of f32 GEMM operands).
 SERVE_FUSED_P16_A13 = SERVE_FUSED_P16.with_serving_activations(P13_2)
+# Paged serving: fused weights + P(16,1)-coded KV pages of 16 tokens — the
+# paged runtime's default (decode state at int16 code width, allocated per
+# page in flight instead of per max_seq slot).
+SERVE_PAGED_P16 = QuantPolicy(weights=P16_2, kv_cache=P16_1,
+                              execution="fused", kv_page_size=16)
 # Hardware-faithful validation: every matmul through the chunked-PDPU kernel.
 VALIDATE_BIT_EXACT = QuantPolicy(weights=P13_2, activations=P13_2,
                                  execution="bit_exact")
@@ -200,6 +211,7 @@ def policy_by_name(name: str) -> QuantPolicy:
         "serve_p16_kv8": SERVE_P16_KV8,
         "serve_fused_p16": SERVE_FUSED_P16,
         "serve_fused_p16_a13": SERVE_FUSED_P16_A13,
+        "serve_paged_p16": SERVE_PAGED_P16,
         "validate_bit_exact": VALIDATE_BIT_EXACT,
     }
     if name not in table:

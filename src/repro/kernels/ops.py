@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core.formats import PDPUConfig, PositFormat
 from . import posit_codec, posit_matmul, pdpu_dot
+from . import paged_attention as paged_attention_mod
 from . import ref  # noqa: F401  (re-exported for tests/benchmarks)
 
 
@@ -74,6 +75,17 @@ def matmul_posit_weights_grouped(x, w_codes, fmt_w: PositFormat, **kw):
     return posit_matmul.posit_matmul_grouped(
         x.astype(jnp.float32), w_codes, None, fmt_w, None,
         interpret=_interpret(), **kw)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
+                    fmt_kv: PositFormat | None = None,
+                    softcap_val: float = 0.0):
+    """Paged-attention decode: gather KV pages by block table, decode posit
+    codes in-kernel next to the q·k dot, streaming softmax across pages.
+    See kernels/paged_attention.py; forward-only (decode hot path)."""
+    return paged_attention_mod.paged_attention(
+        q, k_pages, v_pages, block_tables, lengths, window,
+        fmt_kv=fmt_kv, softcap_val=softcap_val, interpret=_interpret())
 
 
 def pdpu_matmul(a_codes, b_codes, cfg: PDPUConfig, **kw):

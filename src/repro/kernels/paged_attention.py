@@ -1,0 +1,173 @@
+"""Pallas TPU kernel: paged-attention decode over posit-coded KV pages.
+
+The serving KV cache is a pool of fixed-size pages `[n_pages, page_size,
+Hkv*Dh]` stored at posit code width (int8/int16); each batch slot owns an
+ordered list of page indices (its *block table*), so page j of a slot holds
+the keys/values for absolute positions [j*page_size, (j+1)*page_size).
+
+This kernel is the PDPU fused-decode idea applied to attention instead of
+GEMM: per (slot, page) grid cell it
+
+  * gathers the page by block table — `PrefetchScalarGridSpec` scalar-
+    prefetches the block tables so the BlockSpec index_map DMAs exactly the
+    pages the slot owns, HBM->VMEM at code width (the paged cache is never
+    materialized densely, and never decoded in HBM),
+  * decodes the posit codes to exact f32 on the VPU *inside* the kernel,
+    right next to the q·k dot — one decode per element, total,
+  * accumulates a streaming softmax (running max / normalizer / weighted
+    value sum in f32 VMEM scratch) across the slot's pages — the wide-
+    accumulator property held across the page dimension,
+  * normalizes and writes the output once on the last page.
+
+Masking: page p covers positions p*ps + [0, ps); entries at positions
+>= lengths[b] are dead (beyond the slot's written prefix — freshly
+allocated or reclaimed-page garbage) and are masked before the running max,
+so page reclamation never leaks stale keys into a new request's attention.
+A sliding window is applied as (q_pos - pos) < window with
+q_pos = lengths[b] - 1 (the token written immediately before this call).
+
+Shapes here follow the serving decode step (one query token per slot);
+tiles are sized by the model's head layout rather than MXU tiles — on CPU
+every call runs in interpret mode (like the other kernels in this package),
+on TPU the (ps, Hkv*Dh) page is the natural VMEM block.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import posit
+from repro.core.formats import PositFormat
+
+_NEG = -2.0e38
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def _softcap(x, cap: float):
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _paged_attention_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref,
+                            out_ref, m_scr, l_scr, o_scr, *,
+                            fmt_kv: PositFormat | None, page_size: int,
+                            n_heads: int, n_kv_heads: int, head_dim: int,
+                            softcap_val: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    G = n_heads // n_kv_heads
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        o_scr[...] = jnp.zeros_like(o_scr)
+
+    # in-kernel decode: the page travels HBM->VMEM as posit codes and turns
+    # into exact f32 only here, next to the dot (fmt_kv=None = float pages)
+    if fmt_kv is None:
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+    else:
+        k = posit.decode(k_ref[0].astype(jnp.int32) & fmt_kv.mask, fmt_kv)
+        v = posit.decode(v_ref[0].astype(jnp.int32) & fmt_kv.mask, fmt_kv)
+    k = k.reshape(page_size, n_kv_heads, head_dim)
+    v = v.reshape(page_size, n_kv_heads, head_dim)
+
+    scale = 1.0 / math.sqrt(head_dim)
+    qg = q_ref[0].reshape(n_kv_heads, G, head_dim).astype(jnp.float32) * scale
+    s = jnp.einsum("hgd,khd->hgk", qg, k)  # [Hkv, G, ps]
+    s = _softcap(s, softcap_val)
+
+    length = len_ref[b]
+    pos = p * page_size + jax.lax.iota(jnp.int32, page_size)
+    q_pos = length - 1  # the query token sits at the last written position
+    mask = (pos < length) & ((q_pos - pos) < win_ref[0])
+    s = jnp.where(mask[None, None, :], s, _NEG)
+
+    m_prev, l_prev, o_prev = m_scr[...], l_scr[...], o_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    pr = jnp.exp(s - m_new[..., None])
+    pr = jnp.where(mask[None, None, :], pr, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = l_prev * corr + jnp.sum(pr, axis=-1)
+    o_scr[...] = o_prev * corr[..., None] + jnp.einsum("hgk,khd->hgd", pr, v)
+
+    @pl.when(p == pl.num_programs(1) - 1)
+    def _finalize():
+        o = o_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        out_ref[0] = o.reshape(n_heads, head_dim)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt_kv", "softcap_val", "interpret"),
+)
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
+                    fmt_kv: PositFormat | None = None,
+                    softcap_val: float = 0.0, interpret: bool = False):
+    """Single-token attention over block-table-paged, posit-coded KV.
+
+    q            : [B, Hq, Dh] float query (one decode token per slot).
+    k/v_pages    : [n_pages, page_size, Hkv*Dh] posit codes (int8/int16,
+                   decoded in-kernel via fmt_kv) or float (fmt_kv=None).
+    block_tables : [B, max_pages] int32 — page j holds the slot's positions
+                   [j*page_size, (j+1)*page_size); unallocated entries may
+                   point anywhere (they are masked by `lengths`).
+    lengths      : [B] int32 valid positions per slot *including* the
+                   current token (written by the caller before this call).
+    window       : [1] int32 sliding-window size (>= max_seq = unbounded).
+
+    Returns [B, Hq, Dh] f32.
+    """
+    B, Hq, Dh = q.shape
+    n_pages, page_size, kvd = k_pages.shape
+    if v_pages.shape != k_pages.shape:
+        raise ValueError(f"k/v page pools differ: {k_pages.shape} vs "
+                         f"{v_pages.shape}")
+    Hkv = kvd // Dh
+    if Hkv * Dh != kvd or Hq % Hkv:
+        raise ValueError(f"page feature dim {kvd} incompatible with "
+                         f"q heads {Hq} x head_dim {Dh}")
+    M = block_tables.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, Hq, Dh), lambda b, p, bt, ln, wn: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, kvd),
+                         lambda b, p, bt, ln, wn: (bt[b, p], 0, 0)),
+            pl.BlockSpec((1, page_size, kvd),
+                         lambda b, p, bt, ln, wn: (bt[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, Dh),
+                               lambda b, p, bt, ln, wn: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, Hq // Hkv), jnp.float32),
+            pltpu.VMEM((Hkv, Hq // Hkv), jnp.float32),
+            pltpu.VMEM((Hkv, Hq // Hkv, Dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_attention_kernel, fmt_kv=fmt_kv, page_size=page_size,
+        n_heads=Hq, n_kv_heads=Hkv, head_dim=Dh, softcap_val=softcap_val)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Dh), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      window.astype(jnp.int32), q.astype(jnp.float32), k_pages, v_pages)

@@ -5,6 +5,7 @@ pdpu_dot) or allclose (fused matmul) against these references.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import posit
@@ -52,3 +53,38 @@ def pdpu_matmul_ref(a_codes, b_codes, cfg: PDPUConfig):
         b_codes.astype(jnp.int32) & cfg.fmt_in.mask,
         cfg,
     )
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, window,
+                        fmt_kv: PositFormat | None = None,
+                        softcap_val: float = 0.0):
+    """Paged-attention decode semantics, densely: gather each slot's pages
+    by block table, decode the posit codes, plain masked softmax.
+
+    Same contract as `paged_attention.paged_attention` — q [B, Hq, Dh],
+    pages [n_pages, ps, Hkv*Dh], block_tables [B, M], lengths [B] valid
+    counts including the current token, window [1].  Returns [B, Hq, Dh]
+    f32."""
+    B, Hq, Dh = q.shape
+    _, ps, kvd = k_pages.shape
+    Hkv = kvd // Dh
+    G = Hq // Hkv
+    M = block_tables.shape[1]
+    S = M * ps
+    kg = k_pages[block_tables].reshape(B, S, Hkv, Dh)
+    vg = v_pages[block_tables].reshape(B, S, Hkv, Dh)
+    if fmt_kv is not None:
+        kg = decode_ref(kg, fmt_kv)
+        vg = decode_ref(vg, fmt_kv)
+    scale = 1.0 / (Dh ** 0.5)
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kg.astype(jnp.float32))
+    if softcap_val > 0:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]          # [1, S]
+    q_pos = (lengths - 1)[:, None]
+    mask = (pos < lengths[:, None]) & ((q_pos - pos) < window[0])
+    s = jnp.where(mask[:, None, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, vg.astype(jnp.float32))
+    return o.reshape(B, Hq, Dh)

@@ -27,7 +27,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--quant", default="none")
+    ap.add_argument("--dense", action="store_true",
+                    help="dense KV cache instead of the paged pool")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV page size (default: quant policy kv_page_size)")
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature/top-k sampling instead of greedy")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
+    if not args.sample and (args.temperature != 1.0 or args.top_k):
+        raise SystemExit("--temperature/--top-k only take effect with "
+                         "--sample (greedy decoding ignores them)")
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     cfg = cfg.replace(quant=policy_by_name(args.quant))
@@ -35,7 +46,10 @@ def main():
         raise SystemExit(f"{cfg.name} is encoder-only; nothing to serve")
     params = api.init(jax.random.key(0), cfg)
     engine = ServingEngine(cfg, params, batch_slots=args.slots,
-                           max_seq=args.max_seq)
+                           max_seq=args.max_seq, paged=not args.dense,
+                           page_size=args.page_size,
+                           greedy=not args.sample,
+                           temperature=args.temperature, top_k=args.top_k)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(Request(
@@ -46,9 +60,13 @@ def main():
     done = engine.run()
     dt = time.perf_counter() - t0
     total_new = sum(len(r.out_tokens) for r in done)
+    layout = (f"paged(ps={engine.layout.page_size}, "
+              f"peak={engine.allocator.peak_in_use}/"
+              f"{engine.allocator.capacity} pages)"
+              if engine.paged else "dense")
     print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s) kv dtype="
-          f"{'posit' if cfg.quant.kv_cache else cfg.dtype}")
+          f"{'posit' if cfg.quant.kv_cache else cfg.dtype} cache={layout}")
 
 
 if __name__ == "__main__":

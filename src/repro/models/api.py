@@ -27,6 +27,7 @@ from .config import ModelConfig, ShapeConfig
 from .module import ParamSpec, abstract_params, init_params
 from .packing import (pack_params, unpack_params, packed_param_specs,  # noqa: F401
                       pack_manifest, weight_bytes)
+from .paged import PagedLayout  # noqa: F401  (re-exported serving layout)
 
 
 def _mod(cfg: ModelConfig):
@@ -64,12 +65,25 @@ def decode_step(params, tokens, cache, cfg: ModelConfig):
     return _mod(cfg).decode_step(params, tokens, cache, cfg)
 
 
-def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
-    return _mod(cfg).cache_specs(cfg, batch, max_seq)
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+    """Process one prompt chunk [1, C] for one slot of a serving cache
+    (dense or paged) at positions length[slot] + [0, C).  The serving
+    engine's chunked-prefill path: fixed bucketed chunk shapes instead of
+    a retrace per prompt length, writes straight into the slot's cache/
+    pages instead of a whole-cache splice."""
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no autoregressive serving")
+    return _mod(cfg).prefill_chunk(params, tokens, cache, slot, cfg)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
-    return _mod(cfg).init_cache(cfg, batch, max_seq)
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                layout: Optional[PagedLayout] = None):
+    return _mod(cfg).cache_specs(cfg, batch, max_seq, layout)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               layout: Optional[PagedLayout] = None):
+    return _mod(cfg).init_cache(cfg, batch, max_seq, layout)
 
 
 # ---------------------------------------------------------------------------

@@ -134,26 +134,39 @@ def apply(params, batch, cfg: ModelConfig, collect_cache: bool = False,
 # ---------------------------------------------------------------------------
 
 
-def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int, layout=None):
+    """Hybrid decode state: per-block KV (dense rows or posit-coded pages
+    behind a PagedLayout, shared block table across blocks) + per-block
+    mamba conv/SSM states (O(1) in sequence — never paged)."""
     nb, per = _n_blocks(cfg), _period(cfg)
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     conv_ch = cfg.ssm_d_inner + 2 * N
     dt = common.kv_store_dtype(cfg)
-    kv_shape = (nb, batch, max_seq, cfg.n_kv_heads * cfg.head_dim)
-    return {
-        "k": ParamSpec(kv_shape, ("stack", "batch", "kv_seq", "kv_heads"), "zeros", dt),
-        "v": ParamSpec(kv_shape, ("stack", "batch", "kv_seq", "kv_heads"), "zeros", dt),
+    specs = {
         "ssm": ParamSpec((nb, per - 1, batch, H, P, N),
                          ("stack", None, "batch", "ssm_heads", None, None), "zeros"),
         "conv": ParamSpec((nb, per - 1, batch, cfg.ssm_conv - 1, conv_ch),
                           ("stack", None, "batch", None, "ssm_heads"), "zeros", jnp.float32),
         "length": ParamSpec((batch,), ("batch",), "zeros", jnp.int32),
     }
+    if layout is None:
+        kv_shape = (nb, batch, max_seq, cfg.n_kv_heads * cfg.head_dim)
+        kv_axes = ("stack", "batch", "kv_seq", "kv_heads")
+    else:
+        kv_shape = (nb, layout.n_pages, layout.page_size,
+                    cfg.n_kv_heads * cfg.head_dim)
+        kv_axes = ("stack", "kv_pages", None, "kv_heads")
+        specs["block_table"] = ParamSpec(
+            (batch, layout.pages_per_slot(max_seq)), ("batch", None),
+            "zeros", jnp.int32)
+    specs["k"] = ParamSpec(kv_shape, kv_axes, "zeros", dt)
+    specs["v"] = ParamSpec(kv_shape, kv_axes, "zeros", dt)
+    return specs
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, layout=None):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        cache_specs(cfg, batch, max_seq),
+                        cache_specs(cfg, batch, max_seq, layout),
                         is_leaf=lambda s: isinstance(s, ParamSpec))
 
 
@@ -200,7 +213,97 @@ def prefill(params, batch, cfg: ModelConfig, max_seq=None):
     return logits, cache
 
 
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+    """Chunked prefill for one slot: attention sub-layers write/gather the
+    slot's KV (dense row or pages), mamba sub-layers carry the slot's
+    conv/SSM states across chunks (see transformer/mamba prefill_chunk).
+    Returns the last position's logits [1, 1, V] only."""
+    C = tokens.shape[1]
+    x = common.embed_tokens(params["embed"], tokens, cfg)
+    start = cache["length"][slot]
+    per = _period(cfg)
+    bt_row = cache["block_table"][slot] if "block_table" in cache else None
+    conv_s = jax.lax.dynamic_slice_in_dim(cache["conv"], slot, 1, axis=2)
+    ssm_s = jax.lax.dynamic_slice_in_dim(cache["ssm"], slot, 1, axis=2)
+
+    def body(x, xs):
+        blk, k_l, v_l, conv_l, ssm_l = xs
+        convs, ssms = [], []
+        k_new = v_new = None
+        for j in range(per):
+            if j == 0:
+                attn, k_new, v_new = transformer._chunk_attn(
+                    blk["attn"], x, cfg, k_l, v_l, start, bt_row=bt_row,
+                    slot=None if bt_row is not None else slot,
+                    is_global=jnp.bool_(True))
+                x = x + attn
+            else:
+                p = _sub(blk["mamba"], j - 1)
+                out, cs, ss = mamba_m.mamba_block(
+                    p, x, cfg, conv_state=conv_l[j - 1],
+                    ssm_state=ssm_l[j - 1])
+                x = x + out
+                convs.append(cs)
+                ssms.append(ss)
+            x, _ = _ffn_apply(blk, j, x, cfg)
+        return x, (k_new, v_new, jnp.stack(convs), jnp.stack(ssms))
+
+    x, (k_c, v_c, convs, ssms) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], conv_s, ssm_s))
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    new_cache = dict(cache)
+    new_cache.update(
+        k=k_c, v=v_c,
+        conv=cache["conv"].at[:, :, slot].set(
+            convs[:, :, 0].astype(jnp.float32)),
+        ssm=cache["ssm"].at[:, :, slot].set(ssms[:, :, 0]),
+        length=cache["length"].at[slot].set(start + C))
+    return logits, new_cache
+
+
+def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
+    """Paged decode: attention sub-layers scatter the token's KV codes
+    into the slot's current page and attend via the paged-attention
+    kernel; mamba/FFN sub-layers are unchanged."""
+    length = cache["length"]
+    bt = cache["block_table"]
+    x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
+    per = _period(cfg)
+
+    def body(x, xs):
+        blk, k_l, v_l, conv_l, ssm_l = xs
+        convs, ssms = [], []
+        k_new = v_new = None
+        for j in range(per):
+            if j == 0:
+                attn, k_new, v_new = transformer._paged_attn_token(
+                    blk["attn"], x, cfg, k_l, v_l, bt, length,
+                    jnp.bool_(True))
+                x = x + attn
+            else:
+                p = _sub(blk["mamba"], j - 1)
+                out, cs, ss = mamba_m.mamba_block(
+                    p, x, cfg, conv_state=conv_l[j - 1],
+                    ssm_state=ssm_l[j - 1], single_step=True)
+                x = x + out
+                convs.append(cs)
+                ssms.append(ss)
+            x, _ = _ffn_apply(blk, j, x, cfg)
+        return x, (k_new, v_new, jnp.stack(convs), jnp.stack(ssms))
+
+    x, (k_c, v_c, convs, ssms) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"],
+                  cache["conv"], cache["ssm"]))
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    return logits[:, 0], {"k": k_c, "v": v_c, "ssm": ssms, "conv": convs,
+                          "block_table": bt, "length": length + 1}
+
+
 def decode_step(params, tokens, cache, cfg: ModelConfig):
+    if "block_table" in cache:
+        return _decode_step_paged(params, tokens, cache, cfg)
     B = tokens.shape[0]
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
     S_max = cache["k"].shape[2]
@@ -216,8 +319,12 @@ def decode_step(params, tokens, cache, cfg: ModelConfig):
         k_new = v_new = None
         for j in range(per):
             if j == 0:
+                # knobs (upcast/softcap) must mirror the prefill/paged
+                # attention paths, or dense-vs-paged token parity breaks
+                # for configs that set them
                 p = blk["attn"]
-                h = common.rms_norm(x, p["ln1"])
+                h = common.rms_norm(x, p["ln1"],
+                                    upcast=not cfg.tp_bf16_reduce)
                 q = common.qdot(h, p["wq"], cfg.quant).reshape(B, 1, cfg.n_heads, Dh)
                 k = common.qdot(h, p["wk"], cfg.quant).reshape(B, 1, Hkv, Dh)
                 v = common.qdot(h, p["wv"], cfg.quant).reshape(B, 1, Hkv, Dh)
@@ -229,8 +336,9 @@ def decode_step(params, tokens, cache, cfg: ModelConfig):
                     v_l, common.kv_encode(cfg, v.reshape(B, 1, -1)), length)
                 kc = common.kv_decode(cfg, k_new).reshape(B, S_max, Hkv, Dh)
                 vc = common.kv_decode(cfg, v_new).reshape(B, S_max, Hkv, Dh)
-                attn = common.decode_attention(q, kc, vc, length + 1, kv_pos,
-                                               window=None)
+                attn = common.decode_attention(
+                    q, kc, vc, length + 1, kv_pos, window=None,
+                    softcap_val=cfg.logit_softcap)
                 x = x + common.qdot(attn.reshape(B, 1, cfg.n_heads * Dh),
                                     p["wo"], cfg.quant)
             else:

@@ -209,8 +209,12 @@ def apply(params, batch, cfg: ModelConfig):
     return common.logits_head(x, params["embed"], cfg, transpose=True)
 
 
-def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
-    """SSM decode state: O(1) in sequence length (no KV cache)."""
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int, layout=None):
+    """SSM decode state: O(1) in sequence length (no KV cache).
+
+    `layout` (a PagedLayout) is accepted for API uniformity and ignored:
+    there are no KV pages to page — the recurrent state is already the
+    minimal per-slot footprint, so paged and dense serving coincide."""
     L = cfg.n_layers
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     conv_ch = cfg.ssm_d_inner + 2 * _G * N
@@ -222,9 +226,9 @@ def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
     }
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, layout=None):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        cache_specs(cfg, batch, max_seq),
+                        cache_specs(cfg, batch, max_seq, layout),
                         is_leaf=lambda s: isinstance(s, ParamSpec))
 
 
@@ -243,6 +247,36 @@ def prefill(params, batch, cfg: ModelConfig, max_seq=None):
     cache = {"ssm": ssm_s, "conv": conv_s.astype(jnp.float32),
              "length": jnp.full((B,), S, jnp.int32)}
     return logits, cache
+
+
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+    """Chunked prefill for one slot: run the SSD forward over chunk
+    `tokens` [1, C] seeded with the slot's carried conv/SSM states (the
+    recurrence is exact under chunking — state in, state out).  Returns
+    the last position's logits [1, 1, V] only.  Chunk sizes
+    C > cfg.ssm_chunk must be multiples of it (the serving engine's
+    bucket table guarantees this)."""
+    C = tokens.shape[1]
+    x = common.embed_tokens(params["embed"], tokens, cfg)
+    conv_s = jax.lax.dynamic_slice_in_dim(cache["conv"], slot, 1, axis=1)
+    ssm_s = jax.lax.dynamic_slice_in_dim(cache["ssm"], slot, 1, axis=1)
+
+    def body(x, xs):
+        p, cs, ss = xs
+        out, cs2, ss2 = mamba_block(p, x, cfg, conv_state=cs, ssm_state=ss)
+        return x + out, (cs2, ss2)
+
+    x, (conv2, ssm2) = jax.lax.scan(
+        body, x, (params["layers"], conv_s, ssm_s))
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    start = cache["length"][slot]
+    new_cache = dict(cache)
+    new_cache.update(
+        conv=cache["conv"].at[:, slot].set(conv2[:, 0].astype(jnp.float32)),
+        ssm=cache["ssm"].at[:, slot].set(ssm2[:, 0]),
+        length=cache["length"].at[slot].set(start + C))
+    return logits, new_cache
 
 
 def decode_step(params, tokens, cache, cfg: ModelConfig):

@@ -252,8 +252,73 @@ def prefill(params, batch, cfg: ModelConfig, max_seq=None):
                     "length": jnp.full((B,), S, jnp.int32)}
 
 
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+    """Chunked prefill with MoE FFN (see transformer.prefill_chunk;
+    returns the last position's logits [1, 1, V] only).
+
+    Expert routing is per token; the capacity limit applies within the
+    chunk, so smoke-scale capacity factors avoid drops per chunk exactly
+    as they do per full prompt."""
+    C = tokens.shape[1]
+    x = common.embed_tokens(params["embed"], tokens, cfg)
+    start = cache["length"][slot]
+    flags = transformer.layer_flags(cfg)
+    bt_row = cache["block_table"][slot] if "block_table" in cache else None
+
+    def body(x, xs):
+        p, is_global, k_l, v_l = xs
+        attn, k_new, v_new = transformer._chunk_attn(
+            p, x, cfg, k_l, v_l, start, bt_row=bt_row,
+            slot=None if bt_row is not None else slot, is_global=is_global)
+        x = x + attn
+        h = common.rms_norm(x, p["ln2"], upcast=not cfg.tp_bf16_reduce)
+        ff, _ = moe_ffn(p, h, cfg)
+        x = x + ff
+        return x, (k_new, v_new)
+
+    x, (k_c, v_c) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = common.logits_head(
+        x, params["embed"] if cfg.tie_embeddings else params["head"],
+        cfg, transpose=cfg.tie_embeddings)
+    new_cache = dict(cache)
+    new_cache.update(k=k_c, v=v_c,
+                     length=cache["length"].at[slot].set(start + C))
+    return logits, new_cache
+
+
+def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
+    """Paged decode with MoE FFN (see transformer._decode_step_paged)."""
+    x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
+    length = cache["length"]
+    bt = cache["block_table"]
+    flags = transformer.layer_flags(cfg)
+
+    def body(x, xs):
+        p, is_global, k_l, v_l = xs
+        attn, k_new, v_new = transformer._paged_attn_token(
+            p, x, cfg, k_l, v_l, bt, length, is_global)
+        x = x + attn
+        h = common.rms_norm(x, p["ln2"], upcast=not cfg.tp_bf16_reduce)
+        ff, _ = moe_ffn(p, h, cfg)
+        x = x + ff
+        return x, (k_new, v_new)
+
+    x, (k_c, v_c) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(
+        x, params["embed"] if cfg.tie_embeddings else params["head"],
+        cfg, transpose=cfg.tie_embeddings)
+    return logits[:, 0], {"k": k_c, "v": v_c, "block_table": bt,
+                          "length": length + 1}
+
+
 def decode_step(params, tokens, cache, cfg: ModelConfig):
     """One autoregressive step with MoE FFN."""
+    if "block_table" in cache:
+        return _decode_step_paged(params, tokens, cache, cfg)
     B = tokens.shape[0]
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
     S_max = cache["k"].shape[2]

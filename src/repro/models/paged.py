@@ -1,0 +1,94 @@
+"""Paged KV-cache layout + page-pool utilities (vLLM-style block tables).
+
+Serving decode memory should scale with *tokens in flight*, not with
+`batch_slots x max_seq`: the KV cache becomes a pool of fixed-size pages
+`[n_pages, page_size, Hkv*Dh]` stored at the QuantPolicy's KV code width
+(int8/int16 posit codes — the PDPU storage-format win applied to decode
+state), and each batch slot owns an ordered list of page indices (its
+*block table*): page j of a slot holds absolute positions
+[j*page_size, (j+1)*page_size).
+
+Invariants the serving engine maintains (and the kernels rely on):
+
+  * page 0 is reserved as the trash page — never allocated; zeroed block-
+    table rows (free / mid-prefill slots) harmlessly direct stray writes
+    and gathers there,
+  * a slot's pages appear in its block-table row in position order, so
+    `pos -> (row[pos // page_size], pos % page_size)` is the only address
+    computation anywhere,
+  * positions >= length are dead: reclaimed pages are handed to new
+    requests *without zeroing* — every position is written (at `length`)
+    before any attention may read it (reads mask `pos < length`), so stale
+    keys from a retired request can never leak into a new one.
+
+The dense `[L, B, max_seq, F]` cache remains the `layout=None` special
+case throughout `cache_specs` / `init_cache` / `decode_step`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Geometry of the paged KV pool.
+
+    page_size : tokens per page (the policy's `kv_page_size` by default).
+    n_pages   : total pool pages, *including* the reserved trash page 0.
+    """
+
+    page_size: int
+    n_pages: int
+
+    def __post_init__(self):
+        if self.page_size <= 0 or self.n_pages < 2:
+            raise ValueError(f"bad paged layout {self}")
+
+    def pages_per_slot(self, max_seq: int) -> int:
+        """Block-table row length: pages addressing positions < max_seq."""
+        return -(-max_seq // self.page_size)
+
+    @staticmethod
+    def for_slots(batch: int, max_seq: int, page_size: int,
+                  n_pages: int | None = None) -> "PagedLayout":
+        """Default pool: full capacity for every slot plus the trash page
+        (capacity parity with the dense cache; smaller pools oversubscribe)."""
+        if page_size <= 0:
+            raise ValueError(f"page_size must be positive, got {page_size}")
+        per = -(-max_seq // page_size)
+        return PagedLayout(page_size,
+                           n_pages if n_pages is not None
+                           else batch * per + 1)
+
+
+def insert_tokens(pages, block_table, lengths, vals):
+    """Write one decode token per slot into the page pool.
+
+    pages: [P, ps, F]; block_table: [B, M]; lengths: [B] (write position
+    per slot); vals: [B, F].  Rows whose block-table entries are zeroed
+    (free / mid-prefill slots) land on the trash page.
+    """
+    ps = pages.shape[1]
+    B = vals.shape[0]
+    page = block_table[jnp.arange(B), jnp.clip(lengths // ps, 0,
+                                               block_table.shape[1] - 1)]
+    return pages.at[page, lengths % ps].set(vals.astype(pages.dtype))
+
+
+def insert_chunk(pages, bt_row, start, vals):
+    """Write a prefill chunk for one slot: vals [C, F] at positions
+    start + [0, C) of the slot whose block-table row is bt_row [M]."""
+    ps = pages.shape[1]
+    pos = start + jnp.arange(vals.shape[0], dtype=jnp.int32)
+    page = bt_row[jnp.clip(pos // ps, 0, bt_row.shape[0] - 1)]
+    return pages.at[page, pos % ps].set(vals.astype(pages.dtype))
+
+
+def gather_slot(pages, bt_row):
+    """Materialize one slot's pages densely: [M*ps, F].  Entries beyond
+    the slot's written prefix are garbage — callers mask by position."""
+    M = bt_row.shape[0]
+    ps, F = pages.shape[1], pages.shape[2]
+    return pages[bt_row].reshape(M * ps, F)

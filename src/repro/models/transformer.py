@@ -17,10 +17,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
 from repro.parallel import sharding
-from . import common
+from . import common, paged
 from .config import ModelConfig
 from .module import ParamSpec
+from .paged import PagedLayout
 
 # ---------------------------------------------------------------------------
 # parameters
@@ -178,22 +180,37 @@ def apply(params, batch, cfg: ModelConfig, collect_cache: bool = False):
 # ---------------------------------------------------------------------------
 
 
-def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
-    """Abstract KV cache: [L, B, S, Hkv*Dh] for k and v (possibly posit)."""
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                layout: Optional[PagedLayout] = None):
+    """Abstract KV cache.  layout=None: dense [L, B, S, Hkv*Dh] per k/v.
+    With a PagedLayout: a page pool [L, n_pages, page_size, Hkv*Dh] at KV
+    code width plus per-slot block tables (see models/paged.py)."""
     dt = common.kv_store_dtype(cfg)
-    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads * cfg.head_dim)
-    axes = ("layers", "batch", "kv_seq", "kv_heads")
+    if layout is None:
+        shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads * cfg.head_dim)
+        axes = ("layers", "batch", "kv_seq", "kv_heads")
+        return {
+            "k": ParamSpec(shape, axes, "zeros", dt),
+            "v": ParamSpec(shape, axes, "zeros", dt),
+            "length": ParamSpec((batch,), ("batch",), "zeros", jnp.int32),
+        }
+    shape = (cfg.n_layers, layout.n_pages, layout.page_size,
+             cfg.n_kv_heads * cfg.head_dim)
+    axes = ("layers", "kv_pages", None, "kv_heads")
     return {
         "k": ParamSpec(shape, axes, "zeros", dt),
         "v": ParamSpec(shape, axes, "zeros", dt),
+        "block_table": ParamSpec((batch, layout.pages_per_slot(max_seq)),
+                                 ("batch", None), "zeros", jnp.int32),
         "length": ParamSpec((batch,), ("batch",), "zeros", jnp.int32),
     }
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               layout: Optional[PagedLayout] = None):
     return jax.tree.map(
         lambda s: jnp.zeros(s.shape, s.dtype),
-        cache_specs(cfg, batch, max_seq),
+        cache_specs(cfg, batch, max_seq, layout),
         is_leaf=lambda s: isinstance(s, ParamSpec))
 
 
@@ -215,6 +232,8 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: Optional[int] = None):
 
 def decode_step(params, tokens, cache, cfg: ModelConfig):
     """One autoregressive step. tokens: [B] int32. Returns (logits, cache')."""
+    if "block_table" in cache:
+        return _decode_step_paged(params, tokens, cache, cfg)
     B = tokens.shape[0]
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
     S_max = cache["k"].shape[2]
@@ -271,3 +290,175 @@ def _cache_insert(cache_l, new_kv, length):
     roofline at 32k/500k contexts."""
     B = cache_l.shape[0]
     return cache_l.at[jnp.arange(B), length].set(new_kv[:, 0].astype(cache_l.dtype))
+
+
+# ---------------------------------------------------------------------------
+# paged serving: block-table decode + chunked prefill
+# (shared by the moe and hybrid families, which import these helpers)
+# ---------------------------------------------------------------------------
+
+
+def _window_arr(cfg: ModelConfig, is_global):
+    """Per-layer sliding window as a [1] i32 array for the paged kernel."""
+    if cfg.sliding_window is None:
+        return jnp.full((1,), 2**30, jnp.int32)
+    return jnp.where(is_global, jnp.int32(2**30),
+                     jnp.int32(cfg.sliding_window)).reshape(1)
+
+
+def _paged_attn_token(p, x, cfg: ModelConfig, k_l, v_l, bt, length, is_global):
+    """One-token attention sub-block over paged KV (decode hot path).
+
+    x: [B, 1, D]; k_l/v_l: [n_pages, ps, Hkv*Dh] page pools; bt: [B, M];
+    length: [B] pre-insert valid counts.  Writes the new token's KV codes
+    at position `length`, then runs the Pallas paged-attention kernel
+    (block-table gather + in-kernel posit decode).  Returns
+    (post-wo output [B, 1, D], k_pool', v_pool').
+    """
+    B = x.shape[0]
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = common.rms_norm(x, p["ln1"], upcast=not cfg.tp_bf16_reduce)
+    q = common.qdot(h, p["wq"], cfg.quant).reshape(B, 1, Hq, Dh)
+    k = common.qdot(h, p["wk"], cfg.quant).reshape(B, 1, Hkv, Dh)
+    v = common.qdot(h, p["wv"], cfg.quant).reshape(B, 1, Hkv, Dh)
+    if cfg.qk_norm and "q_norm" in p:
+        q = common.rms_norm(q, p["q_norm"])
+        k = common.rms_norm(k, p["k_norm"])
+    q_pos = length[:, None]
+    q = common.rope(q, q_pos, cfg.rope_theta)
+    k = common.rope(k, q_pos, cfg.rope_theta)
+    k_new = paged.insert_tokens(k_l, bt, length,
+                                common.kv_encode(cfg, k.reshape(B, -1)))
+    v_new = paged.insert_tokens(v_l, bt, length,
+                                common.kv_encode(cfg, v.reshape(B, -1)))
+    attn = ops.paged_attention(
+        q.reshape(B, Hq, Dh), k_new, v_new, bt, length + 1,
+        _window_arr(cfg, is_global), fmt_kv=cfg.quant.kv_cache,
+        softcap_val=cfg.logit_softcap)
+    out = common.qdot(attn.reshape(B, 1, Hq * Dh).astype(x.dtype),
+                      p["wo"], cfg.quant)
+    return out, k_new, v_new
+
+
+def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
+                bt_row=None, slot=None, is_global=None):
+    """Prefill-chunk attention for one slot: queries at positions
+    start + [0, C) attend the slot's cached history plus themselves.
+
+    x: [1, C, D].  Paged mode (bt_row [M]): history is gathered by block
+    table and chunk KV codes are scattered into the page pool.  Dense mode
+    (slot scalar): history is the slot's cache row, codes land at
+    [slot, start:start+C].  Intra-chunk attention uses the *raw* (pre-
+    encode) k/v — matching dense whole-prompt prefill semantics, where
+    only re-reads of the cache see quantized values.  Returns
+    (post-wo output [1, C, D], k_cache', v_cache').
+    """
+    _, C, _ = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = common.rms_norm(x, p["ln1"], upcast=not cfg.tp_bf16_reduce)
+    q = common.qdot(h, p["wq"], cfg.quant).reshape(1, C, Hq, Dh)
+    k = common.qdot(h, p["wk"], cfg.quant).reshape(1, C, Hkv, Dh)
+    v = common.qdot(h, p["wv"], cfg.quant).reshape(1, C, Hkv, Dh)
+    if cfg.qk_norm and "q_norm" in p:
+        q = common.rms_norm(q, p["q_norm"])
+        k = common.rms_norm(k, p["k_norm"])
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    q_pos = pos[None]
+    q = common.rope(q, q_pos, cfg.rope_theta)
+    k = common.rope(k, q_pos, cfg.rope_theta)
+    k_codes = common.kv_encode(cfg, k.reshape(C, -1))
+    v_codes = common.kv_encode(cfg, v.reshape(C, -1))
+    if bt_row is not None:
+        hist_k, hist_v = (paged.gather_slot(k_l, bt_row),
+                          paged.gather_slot(v_l, bt_row))
+        k_new = paged.insert_chunk(k_l, bt_row, start, k_codes)
+        v_new = paged.insert_chunk(v_l, bt_row, start, v_codes)
+    else:
+        hist_k, hist_v = k_l[slot], v_l[slot]
+        k_new = k_l.at[slot, pos].set(k_codes.astype(k_l.dtype))
+        v_new = v_l.at[slot, pos].set(v_codes.astype(v_l.dtype))
+    S_h = hist_k.shape[0]
+    hist_pos = jnp.arange(S_h, dtype=jnp.int32)
+    hist_pos = jnp.where(hist_pos < start, hist_pos, -1)[None]  # unwritten
+    kd = common.kv_decode(cfg, hist_k).reshape(1, S_h, Hkv, Dh).astype(k.dtype)
+    vd = common.kv_decode(cfg, hist_v).reshape(1, S_h, Hkv, Dh).astype(v.dtype)
+    k_all = jnp.concatenate([kd, k], axis=1)
+    v_all = jnp.concatenate([vd, v], axis=1)
+    kv_pos = jnp.concatenate([hist_pos, q_pos], axis=1)
+    if cfg.sliding_window is not None:
+        window = jnp.where(is_global, jnp.int32(2**30),
+                           jnp.int32(cfg.sliding_window))
+    else:
+        window = None
+    attn = common.flash_attention(
+        q, k_all, v_all, q_pos, kv_pos, causal=True, window=window,
+        softcap_val=cfg.logit_softcap)
+    out = common.qdot(attn.reshape(1, C, Hq * Dh), p["wo"], cfg.quant,
+                      prec_dtype=common.tp_prec(cfg))
+    return out, k_new, v_new
+
+
+def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
+    """decode_step over the paged cache: per layer, scatter the token's KV
+    codes into the slot's current page and attend via the paged-attention
+    kernel — decode memory traffic scales with tokens in flight."""
+    B = tokens.shape[0]
+    x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
+    length = cache["length"]
+    bt = cache["block_table"]
+    flags = layer_flags(cfg)
+
+    def body(x, xs):
+        p, is_global, k_l, v_l = xs
+        attn, k_new, v_new = _paged_attn_token(p, x, cfg, k_l, v_l, bt,
+                                               length, is_global)
+        x = x + attn
+        x = x + _mlp_block(p, x, cfg)
+        return x, (k_new, v_new)
+
+    x, (k_c, v_c) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    x = common.rms_norm(x, params["final_norm"])
+    logits = common.logits_head(
+        x, params["embed"] if cfg.tie_embeddings else params["head"],
+        cfg, transpose=cfg.tie_embeddings)
+    return logits[:, 0], {"k": k_c, "v": v_c, "block_table": bt,
+                          "length": length + 1}
+
+
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+    """Chunked prefill: process prompt chunk `tokens` [1, C] for one slot.
+
+    The chunk lands at positions length[slot] + [0, C); works on both the
+    dense and the paged cache (detected by the block_table leaf).  Returns
+    (logits [1, 1, V] — the last position only, all the engine ever
+    samples from, so the vocab head GEMM runs on one row per chunk —
+    cache') with length[slot] advanced by C.  Chunks carry no padding
+    (the serving engine decomposes prompts into bucketed chunk sizes
+    exactly), so every processed token is real.
+    """
+    C = tokens.shape[1]
+    x = common.embed_tokens(params["embed"], tokens, cfg)
+    start = cache["length"][slot]
+    flags = layer_flags(cfg)
+    bt_row = cache["block_table"][slot] if "block_table" in cache else None
+
+    def body(x, xs):
+        p, is_global, k_l, v_l = xs
+        attn, k_new, v_new = _chunk_attn(
+            p, x, cfg, k_l, v_l, start, bt_row=bt_row,
+            slot=None if bt_row is not None else slot, is_global=is_global)
+        x = x + attn
+        x = x + _mlp_block(p, x, cfg)
+        return x, (k_new, v_new)
+
+    x, (k_c, v_c) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = common.logits_head(
+        x, params["embed"] if cfg.tie_embeddings else params["head"],
+        cfg, transpose=cfg.tie_embeddings)
+    new_cache = dict(cache)
+    new_cache.update(k=k_c, v=v_c,
+                     length=cache["length"].at[slot].set(start + C))
+    return logits, new_cache

@@ -31,6 +31,8 @@ DEFAULT_RULES: dict = {
     "batch": ("pod", "data"),
     "seq": None,
     "kv_seq": "model",        # sequence-sharded KV cache (long-context decode)
+    "kv_pages": "model",      # paged KV: the page pool shards over the same
+                              # axis as kv_seq (a page is a sequence block)
     "embed": "data",          # FSDP shard of params' d_model dim
     "embed_act": None,        # activations keep embed replicated (TP gathers)
     "heads": "model",

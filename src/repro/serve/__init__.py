@@ -1,2 +1,3 @@
-"""Serving: continuous batching engine over jit'd prefill/decode."""
-from .engine import ServingEngine, Request  # noqa: F401
+"""Serving: paged posit-KV runtime — block-table cache, chunked prefill,
+continuous batching (see engine.py)."""
+from .engine import ServingEngine, Request, PageAllocator  # noqa: F401

@@ -1,30 +1,43 @@
-"""Serving engine: jit'd prefill/decode steps + continuous batching.
+"""Paged posit-KV serving runtime: block-table cache, chunked prefill,
+page reclamation, continuous batching.
 
-Slot-based continuous batching: the decode step always runs a fixed [B]
-batch; finished sequences free their slot and the host control loop refills
-it by prefilling a queued request into that slot (cache splice).  This is
-the standard TPU serving shape (fixed shapes, no recompilation) — the KV
-cache may be posit-coded per the model's QuantPolicy, halving/quartering
-the decode memory roofline (the PDPU storage-format win).
+The engine is a slot scheduler over two jit'd model entry points, both with
+fixed shapes (no per-request recompilation):
+
+  * `prefill_chunk` — prompts are decomposed into chunks drawn from a small
+    bucket table (e.g. 64/16/4/1 tokens, composed exactly — no padding), so
+    serving a mixed-length queue compiles O(#buckets) prefill programs
+    instead of O(#distinct lengths), and each chunk writes its KV straight
+    into the slot's cache rows/pages — there is no whole-prompt prefill and
+    no cache-splice `.at[].set` over the full cache.
+  * `decode_step` — one token for all slots per iteration.
+
+**Paged KV cache** (the default for attention families): the KV cache is a
+pool of fixed-size pages `[n_pages, page_size, Hkv*Dh]` stored at the
+QuantPolicy's `kv_cache` posit code width, plus a per-slot block table
+(models/paged.py).  A host-side free-list allocator hands each admitted
+request exactly the pages its prompt + token budget needs and reclaims them
+at retirement — decode memory scales with *tokens in flight* at code width,
+not with `batch_slots x max_seq` at f32.  Reclaimed pages are reused
+without zeroing: every position is written before any attention may read
+it, so stale keys cannot leak between requests.  The decode hot path runs
+the Pallas paged-attention kernel (kernels/paged_attention.py): block-table
+gather, in-kernel posit decode next to the q·k dot, streaming softmax — the
+PDPU fused-decode idea applied to attention.  `paged=False` (or an SSM
+family, whose recurrent state is already O(1)) serves the dense cache as a
+special case of the same scheduler.
+
+**Sampling**: greedy argmax by default; `greedy=False` enables temperature/
+top-k sampling with a per-request seed (`Request.seed`, default the rid)
+folded with the token index — reproducible across runs and independent of
+batch composition or paged/dense layout.
 
 Weights may equally be posit-coded: `from_checkpoint` restores a packed
-checkpoint (models/packing.py) using the manifest's pack metadata, and the
-GEMM dispatch layer routes the packed weights through the fused Pallas
-kernel when cfg.quant.execution == 'fused' — posit codes HBM-to-MXU with
-one in-kernel decode, end to end.  This includes MoE expert stacks: packed
-`we_*` weights restore as [.., E, K, N] code arrays and run through the
-grouped fused kernel (kernels/dispatch.qdot_grouped), so EP serving reads
-expert weights at int8/int16 width too.
-
-Activation-coded fused serving: a policy with `activations` set (e.g.
-`serve_fused_p16_a13`, or any policy via
-`QuantPolicy.with_serving_activations`) makes every matmul run the
-both-operands `fused_matmul` path — activations are encoded to posit codes
-and decoded inside the kernel next to the weights, so both GEMM operands
-travel at code width (int8/int16) instead of f32.  The trade is one extra
-rounding per activation element for halved/quartered operand bandwidth;
-benchmarks/bench_exec_paths.py measures it.  `execution_summary()` reports
-which datapath an engine is actually running.
+checkpoint (models/packing.py) and the GEMM dispatch layer routes it
+through the fused Pallas kernels (`execution='fused'`), including grouped
+MoE expert stacks and activation-coded policies — see
+`execution_summary()` for the datapath and the kv_bytes/metadata_bytes
+storage split an engine is actually running.
 """
 from __future__ import annotations
 
@@ -37,6 +50,7 @@ import numpy as np
 
 from repro.models import api
 from repro.models.config import ModelConfig
+from repro.models.paged import PagedLayout
 
 
 @dataclasses.dataclass
@@ -45,33 +59,147 @@ class Request:
     prompt: np.ndarray           # [S] int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    seed: Optional[int] = None   # sampling stream (defaults to rid)
     out_tokens: Optional[list] = None
+
+
+class PageAllocator:
+    """Host-side free-list over the KV page pool.
+
+    Page 0 is reserved as the trash page (zeroed block-table rows direct
+    stray writes/gathers there) and is never handed out."""
+
+    def __init__(self, n_pages: int):
+        self.capacity = n_pages - 1
+        self.peak_in_use = 0
+        self._free = list(range(n_pages - 1, 0, -1))  # pop() -> low ids first
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return out
+
+    def free(self, pages: List[int]):
+        self._free.extend(pages)
+
+
+def _build_sampler(greedy: bool, top_k: int):
+    """jit'd token sampler: logits [B, V] + per-row keys -> [B] int32."""
+
+    def sample(logits, keys, temperature):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        l = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+        if top_k > 0 and top_k < l.shape[-1]:
+            kth = jnp.sort(l, axis=-1)[..., -top_k][..., None]
+            l = jnp.where(l >= kth, l, -1e30)
+        return jax.vmap(jax.random.categorical)(keys, l).astype(jnp.int32)
+
+    return jax.jit(sample)
+
+
+_FREE, _PREFILL, _DECODE = 0, 1, 2
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int,
-                 max_seq: int, greedy: bool = True):
+                 max_seq: int, greedy: bool = True, *,
+                 temperature: float = 1.0, top_k: int = 0,
+                 base_seed: int = 0, paged: bool = True,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 prefill_buckets=(64, 16, 4, 1),
+                 prefill_chunks_per_step: int = 0):
+        """batch_slots decode slots over a max_seq position budget per slot.
+
+        paged=True (default) serves attention families from a posit-coded
+        page pool; page_size defaults to cfg.quant.kv_page_size and n_pages
+        to full capacity (batch_slots * pages_per_slot + trash page) —
+        pass a smaller n_pages to oversubscribe (admission then waits for
+        reclaimed pages).  prefill_chunks_per_step=0 completes a prompt's
+        chunks at admission; k>0 interleaves at most k chunks per slot per
+        engine step with ongoing decode (chunked prefill inside the decode
+        loop).
+        """
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
         self.S = max_seq
         self.greedy = greedy
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.prefill_chunks_per_step = int(prefill_chunks_per_step)
+        self.layout = None
+        if paged:
+            ps = cfg.quant.kv_page_size if page_size is None else page_size
+            self.layout = PagedLayout.for_slots(batch_slots, max_seq, ps,
+                                                n_pages)
+        self.cache = api.init_cache(cfg, batch_slots, max_seq, self.layout)
+        self.paged = "block_table" in self.cache  # SSM families: no pages
+        if not self.paged:
+            self.layout = None
+        self.allocator = (PageAllocator(self.layout.n_pages)
+                          if self.paged else None)
+        self.max_pages_per_slot = (self.cache["block_table"].shape[1]
+                                   if self.paged else 0)
+
+        self.prefill_buckets = self._valid_buckets(prefill_buckets)
         self._decode = jax.jit(
             lambda p, t, c: api.decode_step(p, t, c, cfg))
+        self._chunk = jax.jit(
+            lambda p, t, c, s: api.prefill_chunk(p, t, c, s, cfg))
+        # whole-prompt prefill, kept as a reference/debug probe only — the
+        # serving path never calls it (chunked prefill replaces it)
         self._prefill = jax.jit(
             lambda p, b: api.prefill(p, b, cfg, max_seq=max_seq))
-        self.cache = api.init_cache(cfg, batch_slots, max_seq)
-        from repro.models.module import ParamSpec
-        self.cache_bdim = jax.tree.map(
-            lambda s: s.logical_axes.index("batch"),
-            api.cache_specs(cfg, batch_slots, max_seq),
-            is_leaf=lambda s: isinstance(s, ParamSpec))
-        self.slot_free = [True] * batch_slots
+        self._sampler = _build_sampler(greedy, self.top_k)
+        self._base_key = jax.random.key(base_seed)
+        self._dummy_keys = jax.random.split(self._base_key, batch_slots)
+
+        # host-owned scheduler state (device copies are refreshed per call)
+        self.lengths = np.zeros(batch_slots, np.int32)
+        self.block_tables = np.zeros(
+            (batch_slots, max(self.max_pages_per_slot, 1)), np.int32)
+        self.slot_phase = np.full(batch_slots, _FREE, np.int8)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pages: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.slot_cursor = np.zeros(batch_slots, np.int64)  # prompt progress
         self.slot_remaining = np.zeros(batch_slots, np.int64)
         self.next_token = np.zeros(batch_slots, np.int32)
+        self._slot_keys = [None] * batch_slots
+        self._slot_sampled = np.zeros(batch_slots, np.int64)
         self.queue: List[Request] = []
         self.done: List[Request] = []
+
+        # batch-dim index per cache leaf, for restoring rows of slots that
+        # were mid-prefill during a decode call (page pools have no batch
+        # dim — zeroed block-table rows protect them instead)
+        from repro.models.module import ParamSpec
+        specs = api.cache_specs(cfg, batch_slots, max_seq, self.layout)
+        self._state_bdim = {
+            name: (s.logical_axes.index("batch")
+                   if "batch" in s.logical_axes else None)
+            for name, s in specs.items()}
+
+    def _valid_buckets(self, buckets):
+        """Descending chunk sizes; 1 is always included (exact prompt
+        decomposition), and sizes incompatible with the SSD chunk length
+        are dropped (ssd_forward needs C % min(ssm_chunk, C) == 0)."""
+        out = set(int(b) for b in buckets if b >= 1) | {1}
+        if self.cfg.family in ("ssm", "hybrid"):
+            q = self.cfg.ssm_chunk
+            out = {b for b in out if b <= q or b % q == 0}
+        return tuple(sorted(out, reverse=True))
 
     # ------------------------------------------------------------------
     @classmethod
@@ -111,18 +239,61 @@ class ServingEngine:
         params = mgr.restore(step, abstract_params(specs))
         return cls(cfg, params, batch_slots, max_seq, **kw)
 
+    # ------------------------------------------------------------------
+    # storage accounting
+    # ------------------------------------------------------------------
+
     def weight_bytes(self) -> int:
         """Resident weight-storage bytes (int codes count at container width)."""
         from repro.models.packing import weight_bytes
         return weight_bytes(self.params)
 
+    def kv_cache_summary(self) -> dict:
+        """Decode-state storage split: `kv_bytes` is the K/V payload (pages
+        or dense rows, plus SSM/conv state — at code width when posit-
+        coded); `metadata_bytes` is positions + block tables.  The bench
+        storage comparisons use kv_bytes — metadata must not dilute the
+        coded-page win."""
+        kv = meta = 0
+        for name, leaf in self.cache.items():
+            if name in ("length", "block_table"):
+                meta += int(leaf.nbytes)
+            else:
+                kv += int(leaf.nbytes)
+        out = {"kv_bytes": kv, "metadata_bytes": meta,
+               "total_bytes": kv + meta}
+        if self.paged:
+            # bytes actually backing tokens in flight: what a pool sized to
+            # the workload would allocate (decode memory scales with pages
+            # in use at code width, not batch_slots x max_seq at f32)
+            page_b = int(self.cache["k"].nbytes + self.cache["v"].nbytes) \
+                // self.layout.n_pages
+            out["kv_bytes_in_use"] = self.pages_in_use * page_b
+            out["kv_bytes_peak"] = self.allocator.peak_in_use * page_b
+        return out
+
     def kv_cache_bytes(self) -> int:
-        """Allocated KV/state cache bytes for the current slot configuration."""
-        return int(sum(v.nbytes for v in jax.tree.leaves(self.cache)))
+        """Total allocated decode-state bytes (payload + metadata); see
+        kv_cache_summary() for the split."""
+        return self.kv_cache_summary()["total_bytes"]
+
+    @property
+    def slot_free(self) -> List[bool]:
+        """Per-slot availability (compat view over the phase array)."""
+        return [bool(p == _FREE) for p in self.slot_phase]
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.allocator.pages_in_use if self.allocator else 0
+
+    @property
+    def pages_free(self) -> int:
+        return self.allocator.pages_free if self.allocator else 0
 
     def execution_summary(self) -> dict:
         """Which datapath this engine serves on, plus its storage terms."""
         q = self.cfg.quant
+        kv = self.kv_cache_summary()
         return {
             "execution": q.execution,
             "weights": str(q.weights) if q.weights else None,
@@ -131,78 +302,246 @@ class ServingEngine:
             "activation_coded": q.execution == "fused"
                                 and q.activations is not None,
             "weight_bytes": self.weight_bytes(),
-            "kv_cache_bytes": self.kv_cache_bytes(),
+            "kv_cache_bytes": kv["total_bytes"],
+            "kv_bytes": kv["kv_bytes"],
+            "metadata_bytes": kv["metadata_bytes"],
+            "paged": self.paged,
+            "page_size": self.layout.page_size if self.paged else None,
+            "pages_in_use": self.pages_in_use,
+            "pages_free": self.pages_free,
         }
 
     # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+
     def submit(self, req: Request):
+        n = len(req.prompt)
+        if n < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1")
+        # every written position must fit the slot's budget: positions
+        # 0 .. n + max_new_tokens - 2 < max_seq.  Past-the-end writes would
+        # silently wrap into the slot's last page (insert_tokens clips the
+        # page index) / be silently dropped (dense scatter), corrupting or
+        # losing KV — reject at submission instead.
+        if n + req.max_new_tokens - 1 > self.S:
+            raise ValueError(
+                f"request {req.rid}: prompt ({n}) + max_new_tokens "
+                f"({req.max_new_tokens}) needs {n + req.max_new_tokens - 1} "
+                f"positions but max_seq is {self.S}")
+        if self.paged and self._pages_needed(req) > self.allocator.capacity:
+            raise ValueError(
+                f"request {req.rid} needs {self._pages_needed(req)} pages "
+                f"but the pool only has {self.allocator.capacity}; raise "
+                f"n_pages or shorten prompt/max_new_tokens")
         req.out_tokens = []
         self.queue.append(req)
 
-    def _fill_slots(self):
-        for slot in range(self.B):
-            # a request can finish at prefill (first token == eos, or
-            # max_new_tokens == 1): it must not occupy the slot burning
-            # decode steps until slot_remaining drains — complete it here
-            # and keep pulling from the queue until a surviving request
-            # actually occupies the slot
-            while self.slot_free[slot] and self.queue:
-                req = self.queue.pop(0)
-                logits, cache1 = self._prefill(
-                    self.params, {"tokens": jnp.asarray(req.prompt[None])})
-                tok = int(jnp.argmax(logits[0, -1]))
-                req.out_tokens.append(tok)
-                if req.max_new_tokens <= 1 or (
-                        req.eos_id is not None and tok == req.eos_id):
-                    self.done.append(req)  # finished at prefill: the slot
-                    continue               # stays free, no cache splice
-                # splice single-row cache into this slot
-                self.cache = jax.tree.map(
-                    lambda full, one, bdim: _slot_update(full, one, slot, bdim),
-                    self.cache, cache1, self.cache_bdim)
-                self.next_token[slot] = tok
-                self.slot_free[slot] = False
-                self.slot_req[slot] = req
-                self.slot_remaining[slot] = req.max_new_tokens - 1
+    def _pages_needed(self, req: Request) -> int:
+        last_pos = len(req.prompt) + req.max_new_tokens - 2  # final write
+        return min(last_pos // self.layout.page_size + 1,
+                   self.max_pages_per_slot)
 
-    def _retire(self, slot: int):
-        req = self.slot_req[slot]
-        self.done.append(req)
-        self.slot_free[slot] = True
+    def _chunk_sizes(self, n: int):
+        """Exact greedy decomposition of n into bucket sizes (1 included)."""
+        out = []
+        for b in self.prefill_buckets:
+            while n >= b:
+                out.append(b)
+                n -= b
+        return out
+
+    def _refresh_meta(self, cache, decode_mask=None):
+        """Push host-owned lengths/block tables into the device cache.
+        decode_mask zeroes rows of slots that must not touch real state
+        during a decode call (free / mid-prefill slots)."""
+        lengths = self.lengths.copy()
+        if decode_mask is not None:
+            lengths[~decode_mask] = 0
+        cache = dict(cache)
+        cache["length"] = jnp.asarray(lengths)
+        if self.paged:
+            bts = self.block_tables.copy()
+            if decode_mask is not None:
+                bts[~decode_mask] = 0
+            cache["block_table"] = jnp.asarray(bts)
+        return cache
+
+    def _reset_slot_state(self, slot: int):
+        """Zero a slot's recurrent/dense state rows before reuse (SSM and
+        conv states are *seeded* by prefill — stale values would leak)."""
+        new = {}
+        for name, leaf in self.cache.items():
+            bdim = self._state_bdim.get(name)
+            if name in ("length", "block_table") or bdim is None:
+                new[name] = leaf
+                continue
+            idx = (slice(None),) * bdim + (slot,)
+            new[name] = leaf.at[idx].set(0)
+        self.cache = new
+
+    def _slot_key(self, req: Request):
+        seed = req.seed if req.seed is not None else req.rid
+        return jax.random.fold_in(self._base_key, seed)
+
+    def _sample(self, logits_rows, slots, live=None):
+        """Sample one token per row of logits_rows [n, V] for `slots`.
+        `live` masks slots whose draw is discarded (dummy keys, counter
+        not advanced) — lets the decode path sample a fixed [B, V] batch."""
+        if self.greedy:  # argmax never reads keys: skip building them
+            keys = self._dummy_keys[:len(slots)]
+        else:
+            keys = jnp.stack([
+                jax.random.fold_in(self._slot_keys[s],
+                                   int(self._slot_sampled[s]))
+                if (live is None or live[s]) else self._dummy_keys[0]
+                for s in slots])
+            for s in slots:
+                if live is None or live[s]:
+                    self._slot_sampled[s] += 1
+        toks = self._sampler(logits_rows, keys,
+                             jnp.float32(self.temperature))
+        return np.asarray(toks, np.int32)
+
+    def _admit(self):
+        """Move queued requests into free slots (allocating their pages)."""
+        for slot in range(self.B):
+            if self.slot_phase[slot] != _FREE or not self.queue:
+                continue
+            req = self.queue[0]
+            if self.paged:
+                # capacity was validated at submit(); a transient shortfall
+                # here just waits for another request's pages to reclaim
+                pages = self.allocator.alloc(self._pages_needed(req))
+                if pages is None:
+                    return  # wait for reclamation
+                self.slot_pages[slot] = pages
+                self.block_tables[slot] = 0
+                self.block_tables[slot, :len(pages)] = pages
+            self.queue.pop(0)
+            self.slot_req[slot] = req
+            self.slot_phase[slot] = _PREFILL
+            self.slot_cursor[slot] = 0
+            self.lengths[slot] = 0
+            self._slot_keys[slot] = self._slot_key(req)
+            self._slot_sampled[slot] = 0
+            self._reset_slot_state(slot)
+
+    def _release(self, slot: int):
+        if self.paged:
+            self.allocator.free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+            self.block_tables[slot] = 0
+        self.lengths[slot] = 0
+        self.slot_phase[slot] = _FREE
         self.slot_req[slot] = None
 
-    def step(self):
-        """One engine iteration: refill free slots, one decode step."""
-        self._fill_slots()
-        if all(self.slot_free):
-            return False
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(self.next_token), self.cache)
-        toks = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-        for slot in range(self.B):
-            if self.slot_free[slot]:
-                continue
-            req = self.slot_req[slot]
-            tok = int(toks[slot])
+    def _retire(self, slot: int):
+        self.done.append(self.slot_req[slot])
+        self._release(slot)
+
+    def _advance_prefill(self, slot: int, max_chunks: Optional[int]) -> bool:
+        """Run up to max_chunks prompt chunks for a prefilling slot (None =
+        all remaining).  Returns True if any chunk ran."""
+        req = self.slot_req[slot]
+        prompt = np.asarray(req.prompt, np.int32)
+        remaining = len(prompt) - int(self.slot_cursor[slot])
+        sizes = self._chunk_sizes(remaining)
+        if max_chunks is not None:
+            sizes = sizes[:max_chunks]
+        ran = False
+        logits = None
+        for c in sizes:
+            lo = int(self.slot_cursor[slot])
+            tokens = jnp.asarray(prompt[None, lo:lo + c])
+            cache = self._refresh_meta(self.cache)
+            logits, self.cache = self._chunk(self.params, tokens, cache,
+                                             jnp.int32(slot))
+            self.slot_cursor[slot] += c
+            self.lengths[slot] += c
+            ran = True
+        if int(self.slot_cursor[slot]) >= len(prompt):
+            # prompt complete: sample the first token from the last chunk
+            tok = int(self._sample(logits[:, -1], [slot])[0])
             req.out_tokens.append(tok)
+            if req.max_new_tokens <= 1 or (
+                    req.eos_id is not None and tok == req.eos_id):
+                self._retire(slot)  # finished at prefill: reclaim pages now
+            else:
+                self.next_token[slot] = tok
+                self.slot_remaining[slot] = req.max_new_tokens - 1
+                self.slot_phase[slot] = _DECODE
+        return ran
+
+    def _fill_slots(self) -> bool:
+        """Admission + prefill progression for one engine step.  The
+        per-step chunk budget applies per request: a request retiring at
+        prefill frees its slot for the next queued one within the same
+        step (so eos-at-prefill bursts never burn decode iterations)."""
+        budget = self.prefill_chunks_per_step or None
+        ran = False
+        advanced = set()  # request ids already given their budget this step
+        while True:
+            self._admit()
+            todo = [s for s in range(self.B)
+                    if self.slot_phase[s] == _PREFILL
+                    and id(self.slot_req[s]) not in advanced]
+            if not todo:
+                break
+            for slot in todo:
+                advanced.add(id(self.slot_req[slot]))
+                if self._advance_prefill(slot, budget):
+                    ran = True
+        return ran
+
+    def step(self) -> bool:
+        """One engine iteration: admit/prefill, then one decode step for
+        every decoding slot.  Returns False when the engine is idle: no
+        slot is decoding and no prefill remains in flight."""
+        self._fill_slots()
+        decode_mask = self.slot_phase == _DECODE
+        if not decode_mask.any():
+            return bool((self.slot_phase == _PREFILL).any())
+        cache_in = self._refresh_meta(self.cache, decode_mask)
+        logits, new_cache = self._decode(
+            self.params, jnp.asarray(self.next_token), cache_in)
+        if (self.slot_phase == _PREFILL).any():
+            # slots mid-prefill (interleaved mode) must not have their
+            # recurrent/dense state rows advanced by this decode call
+            mask = jnp.asarray(decode_mask)
+            for name, leaf in new_cache.items():
+                bdim = self._state_bdim.get(name)
+                if name in ("length", "block_table") or bdim is None:
+                    continue
+                shape = [1] * leaf.ndim
+                shape[bdim] = self.B
+                m = mask.reshape(shape)
+                new_cache[name] = jnp.where(m, leaf, self.cache[name])
+        self.cache = new_cache
+        # sample over the full fixed [B, V] batch (rows of non-decoding
+        # slots draw from dummy keys and are discarded) so the jitted
+        # sampler never retraces as slots retire
+        slots = [s for s in range(self.B) if decode_mask[s]]
+        toks = self._sample(logits, list(range(self.B)),
+                            live=decode_mask)[np.asarray(slots)]
+        for tok, slot in zip(toks, slots):
+            req = self.slot_req[slot]
+            req.out_tokens.append(int(tok))
             self.next_token[slot] = tok
+            self.lengths[slot] += 1
             self.slot_remaining[slot] -= 1
             if self.slot_remaining[slot] <= 0 or (
-                    req.eos_id is not None and tok == req.eos_id):
+                    req.eos_id is not None and int(tok) == req.eos_id):
                 self._retire(slot)
         return True
 
     def run(self, max_iters: int = 10_000):
         it = 0
-        while (self.queue or not all(self.slot_free)) and it < max_iters:
+        while (self.queue or (self.slot_phase != _FREE).any()) \
+                and it < max_iters:
             if not self.step():
                 break
             it += 1
         return self.done
-
-
-def _slot_update(full, one, slot: int, bdim: int):
-    """Insert a batch-1 cache leaf into slot `slot` along dim `bdim`
-    (batch dims come from the cache ParamSpec logical axes)."""
-    idx = tuple([slice(None)] * bdim + [slice(slot, slot + 1)])
-    return full.at[idx].set(one.astype(full.dtype))
