@@ -34,6 +34,14 @@ Three further sections:
                      storage ratio: dense f32 `batch x max_seq` allocation
                      vs P(16,1)-coded pages actually backing tokens in
                      flight (must be >= 2x smaller).
+  prefix sharing   : a shared-prefix queue (N requests, same system
+                     prompt) served with the refcounted page pool — fresh
+                     page grants must drop >= 2x vs unshared serving, and
+                     N same-prompt requests must stay under 1.5x a single
+                     request's pages (the shared prefix is allocated
+                     once); token parity with unshared serving rides
+                     along.  Prefill device calls shrink too (batched
+                     cross-slot chunks + skipped shared prefixes).
 
 Results are also written as machine-readable BENCH_exec_paths.json
 (latency + storage per plan; the CI artifact).
@@ -159,6 +167,53 @@ def bench_paged_serving(rng):
     }
 
 
+def bench_prefix_sharing(rng, n_req=4):
+    """Shared-prefix serving: N requests with the same prompt against the
+    refcounted page pool — prefill pages and device calls vs unshared.
+
+    The prompt dominates the token budget (the repeated-system-prompt
+    shape), so sharing turns prefill from O(N x prompt) into O(prompt):
+    the prefix pages allocate once and every follow-up request maps them
+    by reference, COW-forking only the tail page it diverges on."""
+    from repro.serve import Request, ServingEngine
+
+    cfg = configs.get_tiny_serving("command_r_35b",
+                                   QuantPolicy(weights=P16_2,
+                                               kv_cache=P16_1))
+    params = api.init(jax.random.key(0), cfg)
+    prompt = rng.integers(0, cfg.vocab_size, 46).astype(np.int32)
+
+    def serve(n, sharing):
+        eng = ServingEngine(cfg, params, batch_slots=2, max_seq=48,
+                            page_size=4, prefill_buckets=(16, 4, 1),
+                            prefix_sharing=sharing)
+        for i in range(n):
+            eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=2))
+        out = {r.rid: r.out_tokens for r in eng.run()}
+        assert len(out) == n and eng.pages_in_use == 0
+        calls = sum(eng.stats["prefill_batch_sizes"].values())
+        return out, eng.allocator.total_allocs, calls, eng
+
+    _, single_pages, _, _ = serve(1, True)
+    out_s, shared_pages, shared_calls, eng_s = serve(n_req, True)
+    out_u, unshared_pages, unshared_calls, _ = serve(n_req, False)
+    return {
+        "n_requests": n_req,
+        "prompt_tokens": int(len(prompt)),
+        "page_size": 4,
+        "token_parity_shared_vs_unshared": out_s == out_u,
+        "single_request_pages": single_pages,
+        "shared_pages_allocated": shared_pages,
+        "unshared_pages_allocated": unshared_pages,
+        "prefill_page_reduction": unshared_pages / shared_pages,
+        "pages_vs_single_ratio": shared_pages / single_pages,
+        "shared_prefill_device_calls": shared_calls,
+        "unshared_prefill_device_calls": unshared_calls,
+        "pages_shared_refs": eng_s.stats["pages_shared"],
+        "cow_forks": eng_s.stats["cow_forks"],
+    }
+
+
 def main():
     rng = np.random.default_rng(0)
     rows = []
@@ -204,6 +259,22 @@ def main():
           f"{paged['paged_p16_1_peak_kv_bytes']}  "
           f"ratio: {paged['kv_storage_ratio']:.2f}x")
 
+    # prefix sharing: N same-prompt requests against the refcounted pool
+    share = bench_prefix_sharing(rng)
+    print(f"\nprefix sharing ({share['n_requests']} requests x "
+          f"{share['prompt_tokens']}-token shared prompt):")
+    print(f"  fresh pages: single {share['single_request_pages']}, "
+          f"shared {share['shared_pages_allocated']}, "
+          f"unshared {share['unshared_pages_allocated']} "
+          f"({share['prefill_page_reduction']:.2f}x reduction; "
+          f"{share['pages_vs_single_ratio']:.2f}x a single request)")
+    print(f"  prefill device calls: shared "
+          f"{share['shared_prefill_device_calls']} vs unshared "
+          f"{share['unshared_prefill_device_calls']}; "
+          f"{share['pages_shared_refs']} page refs shared, "
+          f"{share['cow_forks']} COW forks; token parity: "
+          f"{share['token_parity_shared_vs_unshared']}")
+
     by_plan = {r[1]: r for r in rows[:2]}
     f32_w = by_plan["fake_quant"][5]
     packed_w = by_plan["fused"][5]
@@ -219,6 +290,12 @@ def main():
         "paged_token_parity": all(
             paged["token_parity_paged_vs_dense"].values()),
         "paged_kv_storage_2x": paged["kv_storage_ratio"] >= 2.0,
+        # prefix sharing: shared-prefix queues prefill >= 2x fewer fresh
+        # pages, N same-prompt requests stay < 1.5x a single request's
+        # pages (the shared prefix allocates once), bit-identical tokens
+        "prefix_sharing_parity": share["token_parity_shared_vs_unshared"],
+        "prefix_prefill_pages_2x": share["prefill_page_reduction"] >= 2.0,
+        "prefix_pages_near_single": share["pages_vs_single_ratio"] < 1.5,
     }
     print("checks:", checks)
     write_bench_json("exec_paths", {
@@ -236,6 +313,7 @@ def main():
             "max_rel_grad_deviation": grad_dev,
         },
         "paged_serving": paged,
+        "prefix_sharing": share,
         "checks": checks,
     })
     assert all(checks.values()), checks

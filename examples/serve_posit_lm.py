@@ -6,10 +6,13 @@ End-to-end demonstration of the paged serving runtime:
   2. the packed tree is checkpointed with pack metadata in the manifest,
   3. `ServingEngine.from_checkpoint` restores the codes and serves them
      through the *fused* Pallas GEMM, with the KV cache held as
-     **posit-coded pages**: prompts prefill in bucketed chunks straight
-     into block-table pages, decode attends them through the Pallas
-     paged-attention kernel (block-table gather + in-kernel posit decode),
-     and retired requests hand their pages back to the free list,
+     **posit-coded pages**: prompts prefill in bucketed chunks — same-size
+     chunks from multiple slots batched into one program — straight into
+     block-table pages, requests sharing the demo's system prompt map the
+     same physical prefix pages (refcounted, copy-on-write past the
+     prefix), decode attends them through the Pallas paged-attention
+     kernel (block-table gather + in-kernel posit decode), and retired
+     requests hand their pages back to the free list,
   4. the same checkpoint is re-served *activation-coded*
      (`serve_fused_p16_a13`): both GEMM operands run at int16 code width.
 
@@ -57,7 +60,13 @@ with tempfile.TemporaryDirectory() as ckpt_dir:
           f"page_size={engine.layout.page_size}) + {kv['metadata_bytes']} B "
           f"block-table/position metadata")
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    # repeated-system-prompt traffic: every request opens with the same
+    # 32-token "system prompt" (two full pages — prefix sharing maps them
+    # once) followed by a short per-request question
+    system = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    prompts = [np.concatenate([system,
+                               rng.integers(0, cfg.vocab_size, 4)
+                               .astype(np.int32)])
                for _ in range(N_REQ)]
     for i, p in enumerate(prompts):
         engine.submit(Request(rid=i, prompt=p, max_new_tokens=MAX_NEW))
@@ -67,9 +76,21 @@ with tempfile.TemporaryDirectory() as ckpt_dir:
     mid = engine.kv_cache_summary()
     print(f"mid-flight: {engine.pages_in_use} pages in use / "
           f"{engine.pages_free} free "
-          f"({mid['kv_bytes_in_use']} B of coded KV backing tokens)")
+          f"({mid['kv_bytes_in_use']} B of coded KV backing tokens); "
+          f"{engine.pages_shared_mapped} shared page refs mapped beyond "
+          f"their first block table")
     done = engine.run()
     dt = time.perf_counter() - t0
+    batches = engine.stats["prefill_batch_sizes"]
+    n_chunks = sum(k * v for k, v in batches.items())
+    print(f"prefix sharing: {engine.stats['shared_admissions']} of "
+          f"{len(done)} requests admitted onto shared prefix pages "
+          f"({engine.stats['pages_shared']} page refs shared, "
+          f"{engine.stats['cow_forks']} COW forks); fresh pages allocated: "
+          f"{engine.allocator.total_allocs}")
+    print(f"batched prefill: {n_chunks} chunks in "
+          f"{sum(batches.values())} device calls "
+          f"(batch-size histogram {dict(sorted(batches.items()))})")
 
     # coded-page storage ratio: what the dense f32 worst-case cache would
     # allocate vs the coded pages that peak traffic actually touched

@@ -93,6 +93,19 @@ class QuantPolicy:
                   Hkv*Dh] at `kv_cache` code width and the Pallas paged-
                   attention kernel gathers/decodes pages by block table.
                   Dense serving ignores it.
+    prefix_sharing : serving-scheduler knob — requests whose prompts share
+                  a prefix map the same physical KV pages (refcounted,
+                  copy-on-write on divergence) and only prefill the
+                  unshared tail, turning repeated-system-prompt traffic
+                  from O(requests x prompt) into O(unique prefix) prefill
+                  compute and KV pages.  Paged serving only; the engine
+                  ctor can override per instance.
+    batched_prefill : serving-scheduler knob — prefill chunks of the same
+                  bucket size from multiple slots run as one
+                  [batch_slots, chunk] program (api.prefill_chunk_batched)
+                  instead of a per-slot loop: one compile per bucket and
+                  one device call per (step, bucket) regardless of how
+                  many slots are filling.
     pdpu_n, pdpu_w_m : chunk size and alignment width of the PDPU instance
                   used by the 'bit_exact' plan (paper Table I knobs).
     """
@@ -104,6 +117,8 @@ class QuantPolicy:
     accum_dtype: jnp.dtype = jnp.float32
     execution: str = "fake_quant"
     kv_page_size: int = 16
+    prefix_sharing: bool = True
+    batched_prefill: bool = True
     pdpu_n: int = 4
     pdpu_w_m: int = 14
 

@@ -76,6 +76,20 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
     return _mod(cfg).prefill_chunk(params, tokens, cache, slot, cfg)
 
 
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+    """Cross-slot batched chunked prefill: advance every active slot by one
+    same-size chunk in a single [B, C] program.  tokens: [B, C] int32
+    (inactive rows are padding); active: [B] bool.  The caller zeroes
+    inactive rows' length/block-table metadata (paged writes land on the
+    trash page); inactive rows of batch-dim state (dense KV, SSM/conv) are
+    reverted internally.  One compile per chunk bucket — the serving
+    engine's batched-prefill path.  Returns (last-position logits [B, V],
+    cache')."""
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no autoregressive serving")
+    return _mod(cfg).prefill_chunk_batched(params, tokens, cache, active, cfg)
+
+
 def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
                 layout: Optional[PagedLayout] = None):
     return _mod(cfg).cache_specs(cfg, batch, max_seq, layout)

@@ -262,6 +262,59 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
     return logits, new_cache
 
 
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+    """Cross-slot batched chunked prefill: attention sub-layers run the
+    batched chunk attention over every slot's own pages/rows, mamba
+    sub-layers carry all slots' conv/SSM states at once; inactive rows are
+    reverted against the input cache.  Returns (last-position logits
+    [B, V], cache')."""
+    B, C = tokens.shape
+    x = common.embed_tokens(params["embed"], tokens, cfg)
+    starts = cache["length"]
+    per = _period(cfg)
+    bt = cache.get("block_table")
+
+    def body(x, xs):
+        blk, k_l, v_l, conv_l, ssm_l = xs
+        convs, ssms = [], []
+        k_new = v_new = None
+        for j in range(per):
+            if j == 0:
+                attn, k_new, v_new = transformer._chunk_attn_batched(
+                    blk["attn"], x, cfg, k_l, v_l, starts, bt=bt,
+                    is_global=jnp.bool_(True))
+                x = x + attn
+            else:
+                p = _sub(blk["mamba"], j - 1)
+                out, cs, ss = mamba_m.mamba_block(
+                    p, x, cfg, conv_state=conv_l[j - 1],
+                    ssm_state=ssm_l[j - 1])
+                x = x + out
+                convs.append(cs)
+                ssms.append(ss)
+            x, _ = _ffn_apply(blk, j, x, cfg)
+        return x, (k_new, v_new, jnp.stack(convs), jnp.stack(ssms))
+
+    x, (k_c, v_c, convs, ssms) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"],
+                  cache["conv"], cache["ssm"]))
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    if bt is None:
+        m = active[None, :, None, None]
+        k_c = jnp.where(m, k_c, cache["k"])
+        v_c = jnp.where(m, v_c, cache["v"])
+    new_cache = dict(cache)
+    new_cache.update(
+        k=k_c, v=v_c,
+        conv=jnp.where(active[None, None, :, None, None],
+                       convs.astype(jnp.float32), cache["conv"]),
+        ssm=jnp.where(active[None, None, :, None, None, None],
+                      ssms, cache["ssm"]),
+        length=cache["length"] + jnp.where(active, C, 0).astype(jnp.int32))
+    return logits[:, 0], new_cache
+
+
 def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
     """Paged decode: attention sub-layers scatter the token's KV codes
     into the slot's current page and attend via the paged-attention

@@ -279,6 +279,33 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
     return logits, new_cache
 
 
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+    """Cross-slot batched chunked prefill: every active slot advances one
+    chunk [B, C] through the SSD forward seeded with its own carried
+    conv/SSM state; inactive rows compute on padding and are reverted
+    against the input cache.  Returns (last-position logits [B, V],
+    cache')."""
+    B, C = tokens.shape
+    x = common.embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, xs):
+        p, cs, ss = xs
+        out, cs2, ss2 = mamba_block(p, x, cfg, conv_state=cs, ssm_state=ss)
+        return x + out, (cs2, ss2)
+
+    x, (conv2, ssm2) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = common.logits_head(x, params["embed"], cfg, transpose=True)
+    new_cache = dict(cache)
+    new_cache.update(
+        conv=jnp.where(active[None, :, None, None],
+                       conv2.astype(jnp.float32), cache["conv"]),
+        ssm=jnp.where(active[None, :, None, None, None], ssm2, cache["ssm"]),
+        length=cache["length"] + jnp.where(active, C, 0).astype(jnp.int32))
+    return logits[:, 0], new_cache
+
+
 def decode_step(params, tokens, cache, cfg: ModelConfig):
     B = tokens.shape[0]
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)

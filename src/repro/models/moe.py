@@ -288,6 +288,45 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
     return logits, new_cache
 
 
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+    """Cross-slot batched chunked prefill with MoE FFN (see
+    transformer.prefill_chunk_batched).  The capacity limit applies over
+    the whole [B, C] batch; smoke-scale capacity factors are drop-proof
+    (capacity >= tokens), so active rows stay bit-identical to the
+    per-slot path regardless of batch composition."""
+    B, C = tokens.shape
+    x = common.embed_tokens(params["embed"], tokens, cfg)
+    starts = cache["length"]
+    flags = transformer.layer_flags(cfg)
+    bt = cache.get("block_table")
+
+    def body(x, xs):
+        p, is_global, k_l, v_l = xs
+        attn, k_new, v_new = transformer._chunk_attn_batched(
+            p, x, cfg, k_l, v_l, starts, bt=bt, is_global=is_global)
+        x = x + attn
+        h = common.rms_norm(x, p["ln2"], upcast=not cfg.tp_bf16_reduce)
+        ff, _ = moe_ffn(p, h, cfg)
+        x = x + ff
+        return x, (k_new, v_new)
+
+    x, (k_c, v_c) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = common.logits_head(
+        x, params["embed"] if cfg.tie_embeddings else params["head"],
+        cfg, transpose=cfg.tie_embeddings)
+    if bt is None:
+        m = active[None, :, None, None]
+        k_c = jnp.where(m, k_c, cache["k"])
+        v_c = jnp.where(m, v_c, cache["v"])
+    new_cache = dict(cache)
+    new_cache.update(
+        k=k_c, v=v_c,
+        length=cache["length"] + jnp.where(active, C, 0).astype(jnp.int32))
+    return logits[:, 0], new_cache
+
+
 def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
     """Paged decode with MoE FFN (see transformer._decode_step_paged)."""
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)

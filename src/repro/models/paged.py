@@ -19,7 +19,14 @@ Invariants the serving engine maintains (and the kernels rely on):
   * positions >= length are dead: reclaimed pages are handed to new
     requests *without zeroing* — every position is written (at `length`)
     before any attention may read it (reads mask `pos < length`), so stale
-    keys from a retired request can never leak into a new one.
+    keys from a retired request can never leak into a new one,
+  * pages are *refcounted* (serve.PageAllocator): one physical page may
+    appear in many block tables (prompt-prefix sharing).  A shared page is
+    immutable below its frozen prefix — a slot that must write below it
+    first forks the page (`fork_page`, copy-on-write) into a private copy
+    and swaps its block-table entry; writes at or above the frozen prefix
+    (a donor appending decode tokens past every sharer's trusted range)
+    may land in place.
 
 The dense `[L, B, max_seq, F]` cache remains the `layout=None` special
 case throughout `cache_specs` / `init_cache` / `decode_step`.
@@ -86,9 +93,38 @@ def insert_chunk(pages, bt_row, start, vals):
     return pages.at[page, pos % ps].set(vals.astype(pages.dtype))
 
 
+def insert_chunk_batched(pages, bt, starts, vals):
+    """Write one prefill chunk per slot in a single scatter: vals [B, C, F]
+    at positions starts[b] + [0, C) of slot b.  Rows whose block-table
+    entries are zeroed (inactive slots in a batched prefill call) land on
+    the trash page."""
+    ps = pages.shape[1]
+    B, C, _ = vals.shape
+    pos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None]       # [B, C]
+    page = jnp.take_along_axis(bt, jnp.clip(pos // ps, 0,
+                                            bt.shape[1] - 1), axis=1)  # [B, C]
+    return pages.at[page, pos % ps].set(vals.astype(pages.dtype))
+
+
 def gather_slot(pages, bt_row):
     """Materialize one slot's pages densely: [M*ps, F].  Entries beyond
     the slot's written prefix are garbage — callers mask by position."""
     M = bt_row.shape[0]
     ps, F = pages.shape[1], pages.shape[2]
     return pages[bt_row].reshape(M * ps, F)
+
+
+def gather_slots(pages, bt):
+    """Materialize every slot's pages densely: [B, M*ps, F] (the batched
+    `gather_slot`).  Zeroed block-table rows gather the trash page —
+    garbage, masked by position like any unwritten suffix."""
+    B, M = bt.shape
+    ps, F = pages.shape[1], pages.shape[2]
+    return pages[bt].reshape(B, M * ps, F)
+
+
+def fork_page(pool, dst, src):
+    """Copy-on-write fork: duplicate page `src` into page `dst` across the
+    leading (layer/stack) dim.  pool: [L, P, ps, F]; dst/src are traced
+    scalars so one compile covers every fork."""
+    return pool.at[:, dst].set(pool[:, src])

@@ -398,6 +398,64 @@ def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
     return out, k_new, v_new
 
 
+def _chunk_attn_batched(p, x, cfg: ModelConfig, k_l, v_l, starts, *,
+                        bt=None, is_global=None):
+    """Cross-slot batched prefill-chunk attention: queries of slot b sit at
+    positions starts[b] + [0, C) and attend that slot's cached history plus
+    themselves.  x: [B, C, D]; starts: [B] (0 for inactive rows).  Paged
+    mode (bt [B, M], inactive rows zeroed -> trash page): history is
+    gathered per slot by block table and chunk KV codes scatter into the
+    shared page pool in one batched write.  Dense mode (k_l [B, S, F]):
+    codes land at [b, starts[b] + j] — callers revert inactive rows.  Rows
+    are computationally independent, so each active row is bit-identical
+    to the per-slot `_chunk_attn` path.  Returns
+    (post-wo output [B, C, D], k_cache', v_cache')."""
+    B, C, _ = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = common.rms_norm(x, p["ln1"], upcast=not cfg.tp_bf16_reduce)
+    q = common.qdot(h, p["wq"], cfg.quant).reshape(B, C, Hq, Dh)
+    k = common.qdot(h, p["wk"], cfg.quant).reshape(B, C, Hkv, Dh)
+    v = common.qdot(h, p["wv"], cfg.quant).reshape(B, C, Hkv, Dh)
+    if cfg.qk_norm and "q_norm" in p:
+        q = common.rms_norm(q, p["q_norm"])
+        k = common.rms_norm(k, p["k_norm"])
+    pos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None]    # [B, C]
+    q = common.rope(q, pos, cfg.rope_theta)
+    k = common.rope(k, pos, cfg.rope_theta)
+    k_codes = common.kv_encode(cfg, k.reshape(B, C, -1))
+    v_codes = common.kv_encode(cfg, v.reshape(B, C, -1))
+    if bt is not None:
+        hist_k, hist_v = (paged.gather_slots(k_l, bt),
+                          paged.gather_slots(v_l, bt))
+        k_new = paged.insert_chunk_batched(k_l, bt, starts, k_codes)
+        v_new = paged.insert_chunk_batched(v_l, bt, starts, v_codes)
+    else:
+        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+        hist_k, hist_v = k_l, v_l
+        k_new = k_l.at[rows, pos].set(k_codes.astype(k_l.dtype))
+        v_new = v_l.at[rows, pos].set(v_codes.astype(v_l.dtype))
+    S_h = hist_k.shape[1]
+    hist_pos = jnp.broadcast_to(jnp.arange(S_h, dtype=jnp.int32)[None],
+                                (B, S_h))
+    hist_pos = jnp.where(hist_pos < starts[:, None], hist_pos, -1)
+    kd = common.kv_decode(cfg, hist_k).reshape(B, S_h, Hkv, Dh).astype(k.dtype)
+    vd = common.kv_decode(cfg, hist_v).reshape(B, S_h, Hkv, Dh).astype(v.dtype)
+    k_all = jnp.concatenate([kd, k], axis=1)
+    v_all = jnp.concatenate([vd, v], axis=1)
+    kv_pos = jnp.concatenate([hist_pos, pos], axis=1)
+    if cfg.sliding_window is not None:
+        window = jnp.where(is_global, jnp.int32(2**30),
+                           jnp.int32(cfg.sliding_window))
+    else:
+        window = None
+    attn = common.flash_attention(
+        q, k_all, v_all, pos, kv_pos, causal=True, window=window,
+        softcap_val=cfg.logit_softcap)
+    out = common.qdot(attn.reshape(B, C, Hq * Dh), p["wo"], cfg.quant,
+                      prec_dtype=common.tp_prec(cfg))
+    return out, k_new, v_new
+
+
 def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
     """decode_step over the paged cache: per layer, scatter the token's KV
     codes into the slot's current page and attend via the paged-attention
@@ -462,3 +520,45 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
     new_cache.update(k=k_c, v=v_c,
                      length=cache["length"].at[slot].set(start + C))
     return logits, new_cache
+
+
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+    """Cross-slot batched chunked prefill: one [B, C] program advances every
+    active slot by a chunk of the same bucket size — the serving engine
+    compiles one prefill program per bucket and issues one device call per
+    (step, bucket) however many slots are filling.
+
+    tokens: [B, C] int32 (rows of inactive slots are padding); active: [B]
+    bool.  The caller zeroes inactive rows' length/block-table metadata, so
+    inactive paged writes land on the trash page; inactive rows of
+    batch-dim leaves (dense KV) are reverted here against the input cache.
+    Returns (last-position logits [B, V], cache')."""
+    B, C = tokens.shape
+    x = common.embed_tokens(params["embed"], tokens, cfg)
+    starts = cache["length"]
+    flags = layer_flags(cfg)
+    bt = cache.get("block_table")
+
+    def body(x, xs):
+        p, is_global, k_l, v_l = xs
+        attn, k_new, v_new = _chunk_attn_batched(
+            p, x, cfg, k_l, v_l, starts, bt=bt, is_global=is_global)
+        x = x + attn
+        x = x + _mlp_block(p, x, cfg)
+        return x, (k_new, v_new)
+
+    x, (k_c, v_c) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = common.logits_head(
+        x, params["embed"] if cfg.tie_embeddings else params["head"],
+        cfg, transpose=cfg.tie_embeddings)
+    if bt is None:
+        m = active[None, :, None, None]
+        k_c = jnp.where(m, k_c, cache["k"])
+        v_c = jnp.where(m, v_c, cache["v"])
+    new_cache = dict(cache)
+    new_cache.update(
+        k=k_c, v=v_c,
+        length=cache["length"] + jnp.where(active, C, 0).astype(jnp.int32))
+    return logits[:, 0], new_cache

@@ -1,3 +1,4 @@
-"""Serving: paged posit-KV runtime — block-table cache, chunked prefill,
-continuous batching (see engine.py)."""
+"""Serving: shared-prefix paged posit-KV runtime — refcounted block-table
+cache with copy-on-write prefix sharing, batched cross-slot chunked
+prefill, continuous batching (see engine.py)."""
 from .engine import ServingEngine, Request, PageAllocator  # noqa: F401

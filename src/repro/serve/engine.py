@@ -1,36 +1,58 @@
-"""Paged posit-KV serving runtime: block-table cache, chunked prefill,
-page reclamation, continuous batching.
+"""Paged posit-KV serving runtime: shared block-table cache, batched
+chunked prefill, prefix sharing, page reclamation, continuous batching.
 
-The engine is a slot scheduler over two jit'd model entry points, both with
+The engine is a slot scheduler over jit'd model entry points, all with
 fixed shapes (no per-request recompilation):
 
-  * `prefill_chunk` — prompts are decomposed into chunks drawn from a small
-    bucket table (e.g. 64/16/4/1 tokens, composed exactly — no padding), so
-    serving a mixed-length queue compiles O(#buckets) prefill programs
-    instead of O(#distinct lengths), and each chunk writes its KV straight
-    into the slot's cache rows/pages — there is no whole-prompt prefill and
-    no cache-splice `.at[].set` over the full cache.
+  * `prefill_chunk_batched` — prompts are decomposed into chunks drawn from
+    a small bucket table (e.g. 64/16/4/1 tokens, composed exactly — no
+    padding), and all slots whose next chunk has the same bucket size run
+    as ONE `[batch_slots, chunk]` program: serving a mixed-length queue
+    compiles O(#buckets) prefill programs and issues one device call per
+    (step, bucket) regardless of how many slots are filling.  Each chunk
+    writes its KV straight into the slot's cache rows/pages — there is no
+    whole-prompt prefill and no cache-splice over the full cache.
   * `decode_step` — one token for all slots per iteration.
 
-**Paged KV cache** (the default for attention families): the KV cache is a
-pool of fixed-size pages `[n_pages, page_size, Hkv*Dh]` stored at the
-QuantPolicy's `kv_cache` posit code width, plus a per-slot block table
-(models/paged.py).  A host-side free-list allocator hands each admitted
-request exactly the pages its prompt + token budget needs and reclaims them
-at retirement — decode memory scales with *tokens in flight* at code width,
-not with `batch_slots x max_seq` at f32.  Reclaimed pages are reused
-without zeroing: every position is written before any attention may read
-it, so stale keys cannot leak between requests.  The decode hot path runs
-the Pallas paged-attention kernel (kernels/paged_attention.py): block-table
-gather, in-kernel posit decode next to the q·k dot, streaming softmax — the
-PDPU fused-decode idea applied to attention.  `paged=False` (or an SSM
-family, whose recurrent state is already O(1)) serves the dense cache as a
-special case of the same scheduler.
+**Shared paged KV cache** (the default for attention families): the KV
+cache is a pool of fixed-size pages `[n_pages, page_size, Hkv*Dh]` stored
+at the QuantPolicy's `kv_cache` posit code width, plus a per-slot block
+table (models/paged.py).  The host-side allocator refcounts every page, so
+one physical page may appear in many block tables:
+
+  * a **prefix index** maps the hash of each prompt-token prefix that
+    exactly fills a page to the physical page holding its KV.  A request
+    whose prompt shares that prefix maps the donor's pages into its block
+    table (refcount++) and only prefills the unshared tail — repeated-
+    system-prompt traffic costs O(unique prefix) prefill compute and KV
+    pages instead of O(requests x prompt).  Sharing stops at boundaries
+    aligned with the request's own chunk decomposition, so shared serving
+    is bit-identical to unshared serving.  For recurrent families
+    (hybrid), index entries carry the donor's conv/SSM state snapshot at
+    the boundary; entries without one are chain links only.
+  * shared pages are **copy-on-write**: a page is immutable below its
+    frozen prefix (the positions sharers trust).  A slot about to write
+    below it first forks the page into a private copy (swapping its
+    block-table entry); a donor appending decode tokens past every
+    sharer's trusted range writes in place.  Admission pre-reserves each
+    request's fork page, so a COW fork never allocates mid-flight — pages
+    promised to admitted requests are accounted up front rather than per
+    request in isolation.
+
+Pages reclaim at retirement (refcount--, recycled at zero, prefix-index
+entries evicted) and are reused without zeroing: every position is written
+before any attention may read it, so stale keys cannot leak.  The decode
+hot path runs the Pallas paged-attention kernel
+(kernels/paged_attention.py): block-table gather, in-kernel posit decode
+next to the q·k dot, streaming softmax — the PDPU fused-decode idea
+applied to attention.  `paged=False` (or an SSM family, whose recurrent
+state is already O(1)) serves the dense cache as a special case of the
+same scheduler.
 
 **Sampling**: greedy argmax by default; `greedy=False` enables temperature/
 top-k sampling with a per-request seed (`Request.seed`, default the rid)
 folded with the token index — reproducible across runs and independent of
-batch composition or paged/dense layout.
+batch composition, paged/dense layout, or prefix sharing.
 
 Weights may equally be posit-coded: `from_checkpoint` restores a packed
 checkpoint (models/packing.py) and the GEMM dispatch layer routes it
@@ -42,7 +64,8 @@ storage split an engine is actually running.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import hashlib
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +73,7 @@ import numpy as np
 
 from repro.models import api
 from repro.models.config import ModelConfig
-from repro.models.paged import PagedLayout
+from repro.models.paged import PagedLayout, fork_page
 
 
 @dataclasses.dataclass
@@ -64,15 +87,21 @@ class Request:
 
 
 class PageAllocator:
-    """Host-side free-list over the KV page pool.
+    """Host-side refcounted free-list over the KV page pool.
 
     Page 0 is reserved as the trash page (zeroed block-table rows direct
-    stray writes/gathers there) and is never handed out."""
+    stray writes/gathers there) and is never handed out.  `alloc` grants
+    fresh pages at refcount 1; `share` maps an already-live page into
+    another block table (refcount++); `free` drops one reference per page
+    and recycles a page onto the free list only when its last reference
+    goes — freeing a page that holds no reference raises (double-free)."""
 
     def __init__(self, n_pages: int):
         self.capacity = n_pages - 1
         self.peak_in_use = 0
+        self.total_allocs = 0   # fresh grants ever (shares not counted)
         self._free = list(range(n_pages - 1, 0, -1))  # pop() -> low ids first
+        self._refs: Dict[int, int] = {}
 
     @property
     def pages_free(self) -> int:
@@ -82,15 +111,41 @@ class PageAllocator:
     def pages_in_use(self) -> int:
         return self.capacity - len(self._free)
 
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self._free):
             return None
         out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            self._refs[p] = 1
+        self.total_allocs += len(out)
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
         return out
 
-    def free(self, pages: List[int]):
-        self._free.extend(pages)
+    def share(self, pages: List[int]):
+        """Take one extra reference per page (prefix sharing)."""
+        for p in pages:
+            if self._refs.get(p, 0) < 1:
+                raise ValueError(f"cannot share free page {p}")
+            self._refs[p] += 1
+
+    def free(self, pages: List[int]) -> List[int]:
+        """Drop one reference per page; returns the pages actually
+        recycled (refcount reached zero) so callers can evict metadata."""
+        recycled = []
+        for p in pages:
+            rc = self._refs.get(p, 0)
+            if rc < 1:
+                raise ValueError(f"double free of page {p}")
+            if rc == 1:
+                del self._refs[p]
+                self._free.append(p)
+                recycled.append(p)
+            else:
+                self._refs[p] = rc - 1
+        return recycled
 
 
 def _build_sampler(greedy: bool, top_k: int):
@@ -109,6 +164,7 @@ def _build_sampler(greedy: bool, top_k: int):
 
 
 _FREE, _PREFILL, _DECODE = 0, 1, 2
+_META = ("k", "v", "length", "block_table")
 
 
 class ServingEngine:
@@ -119,7 +175,9 @@ class ServingEngine:
                  page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
                  prefill_buckets=(64, 16, 4, 1),
-                 prefill_chunks_per_step: int = 0):
+                 prefill_chunks_per_step: int = 0,
+                 prefix_sharing: Optional[bool] = None,
+                 batched_prefill: Optional[bool] = None):
         """batch_slots decode slots over a max_seq position budget per slot.
 
         paged=True (default) serves attention families from a posit-coded
@@ -127,9 +185,10 @@ class ServingEngine:
         to full capacity (batch_slots * pages_per_slot + trash page) —
         pass a smaller n_pages to oversubscribe (admission then waits for
         reclaimed pages).  prefill_chunks_per_step=0 completes a prompt's
-        chunks at admission; k>0 interleaves at most k chunks per slot per
-        engine step with ongoing decode (chunked prefill inside the decode
-        loop).
+        chunks at admission; k>0 interleaves at most k chunks per request
+        per engine step with ongoing decode (chunked prefill inside the
+        decode loop).  prefix_sharing / batched_prefill default to the
+        QuantPolicy knobs (both on); sharing applies to paged engines only.
         """
         self.cfg = cfg
         self.params = params
@@ -152,12 +211,32 @@ class ServingEngine:
                           if self.paged else None)
         self.max_pages_per_slot = (self.cache["block_table"].shape[1]
                                    if self.paged else 0)
+        q = cfg.quant
+        self.prefix_sharing = self.paged and bool(
+            q.prefix_sharing if prefix_sharing is None else prefix_sharing)
+        if batched_prefill is None:
+            # routed-MoE capacity is computed over the whole [B, C] batch:
+            # unless the capacity factor is drop-proof (capacity >= tokens
+            # even if routing concentrates), padding rows of a batched
+            # chunk could displace active tokens and make outputs depend
+            # on batch composition — fall back to per-slot prefill there.
+            # An explicit batched_prefill=True overrides.
+            droppy_moe = (cfg.n_experts > 0 and
+                          cfg.capacity_factor * cfg.top_k < cfg.n_experts)
+            self.batched_prefill = bool(q.batched_prefill) and not droppy_moe
+        else:
+            self.batched_prefill = bool(batched_prefill)
 
         self.prefill_buckets = self._valid_buckets(prefill_buckets)
         self._decode = jax.jit(
             lambda p, t, c: api.decode_step(p, t, c, cfg))
         self._chunk = jax.jit(
             lambda p, t, c, s: api.prefill_chunk(p, t, c, s, cfg))
+        self._chunk_batched = jax.jit(
+            lambda p, t, c, a: api.prefill_chunk_batched(p, t, c, a, cfg))
+        # COW page duplication; dst/src are traced so one compile covers
+        # every fork
+        self._fork_fn = jax.jit(fork_page)
         # whole-prompt prefill, kept as a reference/debug probe only — the
         # serving path never calls it (chunked prefill replaces it)
         self._prefill = jax.jit(
@@ -173,23 +252,39 @@ class ServingEngine:
         self.slot_phase = np.full(batch_slots, _FREE, np.int8)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_pages: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.slot_reserve: List[Optional[int]] = [None] * batch_slots
         self.slot_cursor = np.zeros(batch_slots, np.int64)  # prompt progress
         self.slot_remaining = np.zeros(batch_slots, np.int64)
         self.next_token = np.zeros(batch_slots, np.int32)
         self._slot_keys = [None] * batch_slots
         self._slot_sampled = np.zeros(batch_slots, np.int64)
+        self._slot_registered = np.zeros(batch_slots, np.int64)
         self.queue: List[Request] = []
         self.done: List[Request] = []
+
+        # prefix index: digest(prompt token prefix) -> (page, state or
+        # None); _page_keys/_frozen support eviction and COW decisions;
+        # _held are pages a retiring request left behind because a queued
+        # request's prefix still matches them (the engine owns their last
+        # reference until that request admits or leaves the queue)
+        self.prefix_index: Dict[bytes, tuple] = {}
+        self._page_keys: Dict[int, set] = {}
+        self._frozen: Dict[int, int] = {}
+        self._held: set = set()
+        self.stats = {"pages_shared": 0, "shared_admissions": 0,
+                      "cow_forks": 0, "prefill_batch_sizes": {}}
 
         # batch-dim index per cache leaf, for restoring rows of slots that
         # were mid-prefill during a decode call (page pools have no batch
         # dim — zeroed block-table rows protect them instead)
-        from repro.models.module import ParamSpec
         specs = api.cache_specs(cfg, batch_slots, max_seq, self.layout)
         self._state_bdim = {
             name: (s.logical_axes.index("batch")
                    if "batch" in s.logical_axes else None)
             for name, s in specs.items()}
+        # recurrent families (hybrid) carry per-slot conv/SSM state that
+        # prefix sharing must snapshot/restore at the shared boundary
+        self._recurrent = any(name not in _META for name in self.cache)
 
     def _valid_buckets(self, buckets):
         """Descending chunk sizes; 1 is always included (exact prompt
@@ -290,6 +385,28 @@ class ServingEngine:
     def pages_free(self) -> int:
         return self.allocator.pages_free if self.allocator else 0
 
+    @property
+    def pages_promised(self) -> int:
+        """Diagnostic: worst-case pages the queued-but-unscheduled
+        requests will draw (each counted unshared — sharing is
+        opportunistic and may evaporate if donors retire first).  The
+        engine does not gate submission on this sum: joint oversubscription
+        is served by waiting for reclamation, and what admission accounts
+        up front is each admitted request's full private demand including
+        its copy-on-write fork reserve (see _admit), so an admitted
+        request never allocates mid-flight."""
+        if not self.paged:
+            return 0
+        return sum(self._pages_needed(r) for r in self.queue)
+
+    @property
+    def pages_shared_mapped(self) -> int:
+        """Extra block-table references onto live pages beyond the first
+        (how many page-loads prefix sharing is currently deduplicating)."""
+        if not self.paged:
+            return 0
+        return sum(rc - 1 for rc in self.allocator._refs.values())
+
     def execution_summary(self) -> dict:
         """Which datapath this engine serves on, plus its storage terms."""
         q = self.cfg.quant
@@ -309,6 +426,10 @@ class ServingEngine:
             "page_size": self.layout.page_size if self.paged else None,
             "pages_in_use": self.pages_in_use,
             "pages_free": self.pages_free,
+            "prefix_sharing": self.prefix_sharing,
+            "batched_prefill": self.batched_prefill,
+            "pages_shared_mapped": self.pages_shared_mapped,
+            "cow_forks": self.stats["cow_forks"],
         }
 
     # ------------------------------------------------------------------
@@ -345,7 +466,11 @@ class ServingEngine:
                    self.max_pages_per_slot)
 
     def _chunk_sizes(self, n: int):
-        """Exact greedy decomposition of n into bucket sizes (1 included)."""
+        """Exact greedy decomposition of n into bucket sizes (1 included).
+        The decomposition has the suffix property — the tail after any
+        chunk boundary equals the greedy decomposition of the remainder —
+        which is what makes prefix-shared prefill bit-identical to
+        unshared prefill when sharing stops at a boundary."""
         out = []
         for b in self.prefill_buckets:
             while n >= b:
@@ -353,19 +478,25 @@ class ServingEngine:
                 n -= b
         return out
 
-    def _refresh_meta(self, cache, decode_mask=None):
+    def _next_chunk(self, slot: int) -> int:
+        remaining = len(self.slot_req[slot].prompt) \
+            - int(self.slot_cursor[slot])
+        return self._chunk_sizes(remaining)[0]
+
+    def _refresh_meta(self, cache, mask=None):
         """Push host-owned lengths/block tables into the device cache.
-        decode_mask zeroes rows of slots that must not touch real state
-        during a decode call (free / mid-prefill slots)."""
+        mask zeroes rows of slots that must not touch real state during a
+        batched call (free / mid-prefill slots in decode, non-group slots
+        in batched prefill)."""
         lengths = self.lengths.copy()
-        if decode_mask is not None:
-            lengths[~decode_mask] = 0
+        if mask is not None:
+            lengths[~mask] = 0
         cache = dict(cache)
         cache["length"] = jnp.asarray(lengths)
         if self.paged:
             bts = self.block_tables.copy()
-            if decode_mask is not None:
-                bts[~decode_mask] = 0
+            if mask is not None:
+                bts[~mask] = 0
             cache["block_table"] = jnp.asarray(bts)
         return cache
 
@@ -389,7 +520,7 @@ class ServingEngine:
     def _sample(self, logits_rows, slots, live=None):
         """Sample one token per row of logits_rows [n, V] for `slots`.
         `live` masks slots whose draw is discarded (dummy keys, counter
-        not advanced) — lets the decode path sample a fixed [B, V] batch."""
+        not advanced) — lets batched paths sample a fixed [B, V] batch."""
         if self.greedy:  # argmax never reads keys: skip building them
             keys = self._dummy_keys[:len(slots)]
         else:
@@ -405,34 +536,362 @@ class ServingEngine:
                              jnp.float32(self.temperature))
         return np.asarray(toks, np.int32)
 
-    def _admit(self):
-        """Move queued requests into free slots (allocating their pages)."""
+    # ------------------------------------------------------------------
+    # prefix index: registration, lookup, eviction
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _digest(tokens) -> bytes:
+        return hashlib.blake2b(
+            np.ascontiguousarray(tokens, np.int32).tobytes(),
+            digest_size=16).digest()
+
+    def _prompt_digests(self, req: Request):
+        """Per-request digest cache: ([digest per full-page boundary],
+        full-prompt digest).  Admission walks these every pass for every
+        queued request (lookup, deferral, holds) — hashing each prefix
+        once per request instead of once per pass keeps that host work
+        O(prompt/page) lookups."""
+        ps = self.layout.page_size
+        cached = getattr(req, "_prefix_digests", None)
+        if cached is not None and cached[0] == ps:
+            return cached[1], cached[2]
+        prompt = np.ascontiguousarray(req.prompt, np.int32)
+        h = hashlib.blake2b(digest_size=16)
+        full = []
+        for i in range(len(prompt) // ps):
+            h.update(prompt[i * ps:(i + 1) * ps].tobytes())
+            full.append(h.copy().digest())
+        req._prefix_digests = (ps, full, self._digest(prompt))
+        return full, req._prefix_digests[2]
+
+    def _put_index(self, key: bytes, page: int, frozen: int, state=None):
+        """Register a page for the token prefix hashed by `key`; `frozen`
+        is the first position holders may still write (everything below is
+        trusted by sharers and must copy-on-write)."""
+        if key in self.prefix_index:
+            return  # first registration wins; duplicates are identical KV
+        self.prefix_index[key] = (page, state)
+        self._page_keys.setdefault(page, set()).add(key)
+        self._frozen[page] = max(self._frozen.get(page, 0), frozen)
+
+    def _evict(self, recycled: List[int]):
+        """Drop index entries whose page went back to the free list (its
+        content is about to be reused — the hash no longer describes it)."""
+        for p in recycled:
+            for key in self._page_keys.pop(p, ()):
+                self.prefix_index.pop(key, None)
+            self._frozen.pop(p, None)
+
+    def _snapshot_state(self, slot: int):
+        """Host copy of the slot's recurrent (conv/SSM) rows, or None for
+        pure-attention families."""
+        out = {}
+        for name, leaf in self.cache.items():
+            bdim = self._state_bdim.get(name)
+            if name in _META or bdim is None:
+                continue
+            idx = (slice(None),) * bdim + (slot,)
+            out[name] = np.asarray(leaf[idx])
+        return out or None
+
+    def _restore_state(self, slot: int, state: dict):
+        new = dict(self.cache)
+        for name, arr in state.items():
+            bdim = self._state_bdim[name]
+            idx = (slice(None),) * bdim + (slot,)
+            new[name] = new[name].at[idx].set(jnp.asarray(arr))
+        self.cache = new
+
+    def _register_pages(self, slot: int):
+        """Publish the slot's freshly prompt-filled pages to the prefix
+        index (called after every prefill chunk, while cursor <= prompt
+        length — so every registered page holds prompt KV only).  For
+        recurrent families a conv/SSM snapshot rides along when the chunk
+        end lands exactly on the page boundary; boundary-misaligned pages
+        become stateless chain links."""
+        if not self.prefix_sharing:
+            return
+        req = self.slot_req[slot]
+        ps = self.layout.page_size
+        cur = int(self.slot_cursor[slot])
+        full = cur // ps
+        digests, full_digest = self._prompt_digests(req)
+        snap = (self._snapshot_state(slot)
+                if self._recurrent and cur % ps == 0 and full else None)
+        for i in range(int(self._slot_registered[slot]), full):
+            self._put_index(digests[i], int(self.block_tables[slot, i]),
+                            (i + 1) * ps,
+                            snap if (i + 1) * ps == cur else None)
+        self._slot_registered[slot] = full
+        if cur == len(req.prompt) and cur % ps and not self._recurrent:
+            # the partially-filled tail page: exact-duplicate prompts map
+            # it too and copy-on-write their divergence
+            self._put_index(full_digest,
+                            int(self.block_tables[slot, full]), cur, None)
+
+    def _tail_shareable(self, n: int) -> bool:
+        """May a request of prompt length n map an exact-duplicate donor's
+        partially-filled tail page?  Requires a divergence point the
+        request can actually prefill bit-identically: position n-1 must be
+        a boundary of its own chunk decomposition (the same condition
+        _lookup_prefix enforces — holds and deferral must not wait for a
+        share admission would refuse), and recurrent families need a state
+        snapshot partial pages never carry."""
+        ps = self.layout.page_size
+        return (not self._recurrent and n % ps != 0
+                and (n - 1) in {int(t)
+                                for t in np.cumsum(self._chunk_sizes(n))})
+
+    def _chain_pages(self, req: Request) -> set:
+        """Pages the index currently offers for this request's prefix
+        (full-page chain plus the exact-duplicate tail page)."""
+        ps = self.layout.page_size
+        n = len(req.prompt)
+        digests, full_digest = self._prompt_digests(req)
+        out = set()
+        for i in range((n - 1) // ps):
+            ent = self.prefix_index.get(digests[i])
+            if ent is None:
+                break
+            out.add(ent[0])
+        else:
+            if self._tail_shareable(n):
+                ent = self.prefix_index.get(full_digest)
+                if ent is not None:
+                    out.add(ent[0])
+        return out
+
+    def _wanted_by_queue(self) -> set:
+        """Index pages some queued-but-unscheduled request would map."""
+        wanted = set()
+        for req in self.queue:
+            wanted |= self._chain_pages(req)
+        return wanted
+
+    def _prune_holds(self):
+        """Free held pages no queued request's prefix matches anymore.
+        Once the queue drains this releases every hold — the pool always
+        reclaims completely."""
+        if not self._held:
+            return
+        wanted = self._wanted_by_queue()
+        for p in list(self._held):
+            if p not in wanted:
+                self._held.discard(p)
+                self._evict(self.allocator.free([p]))
+
+    def _drop_all_holds(self):
+        """Release every held page (liveness over sharing: when admission
+        cannot proceed and nothing in flight will ever reclaim, the cached
+        prefixes must yield their pages)."""
+        for p in list(self._held):
+            self._held.discard(p)
+            self._evict(self.allocator.free([p]))
+
+    def _lookup_prefix(self, req: Request):
+        """Longest shareable prompt prefix for `req` from the index.
+
+        Returns (shared pages, n_shared_tokens, state, partial).  Sharing
+        stops at a boundary of the request's own chunk decomposition (the
+        greedy suffix property then makes the tail's chunking — and hence
+        every logit — bit-identical to an unshared run), leaves at least
+        one prompt token to prefill (the engine samples from its logits),
+        and for recurrent families requires a state snapshot at the
+        boundary."""
+        if not self.prefix_sharing:
+            return [], 0, None, False
+        n = len(req.prompt)
+        ps = self.layout.page_size
+        digests, full_digest = self._prompt_digests(req)
+        bounds = set(int(t) for t in np.cumsum(self._chunk_sizes(n)))
+        chain = []
+        for i in range((n - 1) // ps):
+            ent = self.prefix_index.get(digests[i])
+            if ent is None:
+                break
+            chain.append(ent)
+        best = ([], 0, None, False)
+        for i, (page, state) in enumerate(chain):
+            t = (i + 1) * ps
+            if t in bounds and (state is not None or not self._recurrent):
+                best = ([p for p, _ in chain[:i + 1]], t, state, False)
+        if self._tail_shareable(n) and len(chain) == n // ps:
+            ent = self.prefix_index.get(full_digest)
+            if ent is not None:
+                best = ([p for p, _ in chain] + [ent[0]], n - 1, None, True)
+        return best
+
+    # ------------------------------------------------------------------
+    # copy-on-write
+    # ------------------------------------------------------------------
+
+    def _ensure_writable(self, slot: int, lo: int, hi: int):
+        """Fork any shared page the slot is about to write below its
+        frozen prefix.  Writes at/after the frozen position (a donor
+        appending decode tokens past every sharer's trusted range) stay in
+        place — sharers never read there."""
+        ps = self.layout.page_size
+        for idx in range(lo // ps, (hi - 1) // ps + 1):
+            if idx >= self.max_pages_per_slot:
+                break
+            p = int(self.block_tables[slot, idx])
+            if p == 0 or self.allocator.refcount(p) <= 1:
+                continue
+            if max(lo, idx * ps) >= self._frozen.get(p, 1 << 30):
+                continue
+            self._fork_slot_page(slot, idx, p)
+
+    def _fork_slot_page(self, slot: int, idx: int, src: int):
+        dst = self.slot_reserve[slot]
+        self.slot_reserve[slot] = None
+        if dst is None:
+            got = self.allocator.alloc(1)
+            if got is None:
+                raise RuntimeError(
+                    f"page pool exhausted during copy-on-write fork for "
+                    f"slot {slot}: admission must reserve fork pages up "
+                    f"front")
+            dst = got[0]
+            self.slot_pages[slot].append(dst)
+        cache = dict(self.cache)
+        cache["k"] = self._fork_fn(cache["k"], dst, src)
+        cache["v"] = self._fork_fn(cache["v"], dst, src)
+        self.cache = cache
+        self.block_tables[slot, idx] = dst
+        self.slot_pages[slot].remove(src)
+        self._evict(self.allocator.free([src]))
+        self.stats["cow_forks"] += 1
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def _next_admissible(self) -> Optional[int]:
+        """Queue index of the first request to admit.  A request whose
+        prompt would share a longer prefix with a still-prefilling slot
+        than the index currently offers is deferred (it admits next pass,
+        after the donor registers its pages) — later distinct requests may
+        jump ahead so slots keep filling."""
+        for qi, req in enumerate(self.queue):
+            if self.prefix_sharing and self._should_defer(req):
+                continue
+            return qi
+        return None
+
+    def _should_defer(self, req: Request) -> bool:
+        n = len(req.prompt)
+        ps = self.layout.page_size
+        max_full = (n - 1) // ps
+        if max_full == 0 and (self._recurrent or n % ps == 0):
+            return False
+        digests, full_digest = self._prompt_digests(req)
+        # tokens the index can hand us right now
+        have = 0
+        for i in range(max_full):
+            if digests[i] in self.prefix_index:
+                have = (i + 1) * ps
+            else:
+                break
+        tail_ok = self._tail_shareable(n)
+        if (tail_ok and have == (n // ps) * ps
+                and full_digest in self.prefix_index):
+            have = n - 1
+        # tokens a still-prefilling donor will register once it finishes
+        for s in range(self.B):
+            if self.slot_phase[s] != _PREFILL:
+                continue
+            o_digests, o_full = self._prompt_digests(self.slot_req[s])
+            k = 0
+            for i in range(min(max_full, len(o_digests))):
+                if digests[i] == o_digests[i]:
+                    k = (i + 1) * ps
+                else:
+                    break
+            if tail_ok and k == (n // ps) * ps and o_full == full_digest:
+                k = n - 1  # exact duplicate: the tail page will share too
+            if k > have:
+                return True
+        return False
+
+    def _admit(self) -> bool:
+        """Move queued requests into free slots.  Paged admission is
+        atomic per request and accounts the full private demand up front —
+        shared prefix pages are mapped by reference and a copy-on-write
+        fork page is pre-reserved, so an admitted request never allocates
+        mid-flight.  Returns True if any request was admitted."""
+        admitted = False
         for slot in range(self.B):
             if self.slot_phase[slot] != _FREE or not self.queue:
                 continue
-            req = self.queue[0]
+            qi = self._next_admissible()
+            if qi is None:
+                break
+            req = self.queue[qi]
+            n_shared, state = 0, None
             if self.paged:
                 # capacity was validated at submit(); a transient shortfall
                 # here just waits for another request's pages to reclaim
-                pages = self.allocator.alloc(self._pages_needed(req))
+                shared, n_shared, state, partial = self._lookup_prefix(req)
+                k_full = len(shared) - (1 if partial else 0)
+                pages = self.allocator.alloc(self._pages_needed(req) - k_full)
+                if pages is None and self._held \
+                        and not (self.slot_phase != _FREE).any():
+                    # nothing in flight will ever reclaim: held prefix
+                    # pages must yield so the head of the queue can run
+                    # (its demand may not overlap what the holds cache)
+                    self._drop_all_holds()
+                    shared, n_shared, state, partial = \
+                        self._lookup_prefix(req)
+                    k_full = len(shared) - (1 if partial else 0)
+                    pages = self.allocator.alloc(
+                        self._pages_needed(req) - k_full)
                 if pages is None:
-                    return  # wait for reclamation
-                self.slot_pages[slot] = pages
+                    return admitted  # wait for reclamation
+                self.allocator.share(shared)
+                reserve = pages.pop() if partial else None
+                row = shared + pages
+                self.slot_pages[slot] = list(row) + (
+                    [reserve] if reserve is not None else [])
+                self.slot_reserve[slot] = reserve
                 self.block_tables[slot] = 0
-                self.block_tables[slot, :len(pages)] = pages
-            self.queue.pop(0)
+                self.block_tables[slot, :len(row)] = row
+                self._slot_registered[slot] = n_shared \
+                    // self.layout.page_size
+                if shared:
+                    self.stats["pages_shared"] += len(shared)
+                    self.stats["shared_admissions"] += 1
+            self.queue.pop(qi)
+            if self.paged:
+                self._prune_holds()
             self.slot_req[slot] = req
             self.slot_phase[slot] = _PREFILL
-            self.slot_cursor[slot] = 0
-            self.lengths[slot] = 0
+            self.slot_cursor[slot] = n_shared
+            self.lengths[slot] = n_shared
             self._slot_keys[slot] = self._slot_key(req)
             self._slot_sampled[slot] = 0
             self._reset_slot_state(slot)
+            if state is not None:
+                self._restore_state(slot, state)
+            admitted = True
+        return admitted
 
     def _release(self, slot: int):
         if self.paged:
-            self.allocator.free(self.slot_pages[slot])
+            pages = self.slot_pages[slot]
+            if self.prefix_sharing and self.queue:
+                # keep prefix pages a queued request still matches alive:
+                # the slot's reference becomes an engine hold, released by
+                # _prune_holds once nothing in the queue wants the page
+                wanted = self._wanted_by_queue()
+                keep = {p for p in pages
+                        if p in wanted and p not in self._held
+                        and self.allocator.refcount(p) == 1}
+                self._held.update(keep)
+                pages = [p for p in pages if p not in keep]
+            self._evict(self.allocator.free(pages))
             self.slot_pages[slot] = []
+            self.slot_reserve[slot] = None
             self.block_tables[slot] = 0
         self.lengths[slot] = 0
         self.slot_phase[slot] = _FREE
@@ -442,58 +901,113 @@ class ServingEngine:
         self.done.append(self.slot_req[slot])
         self._release(slot)
 
-    def _advance_prefill(self, slot: int, max_chunks: Optional[int]) -> bool:
-        """Run up to max_chunks prompt chunks for a prefilling slot (None =
-        all remaining).  Returns True if any chunk ran."""
+    # ------------------------------------------------------------------
+    # prefill progression
+    # ------------------------------------------------------------------
+
+    def _finish_prompt(self, slot: int, tok: int):
+        """Prompt complete: record the sampled first token, retire at
+        prefill (eos / single-token budget) or move to decode."""
+        req = self.slot_req[slot]
+        req.out_tokens.append(tok)
+        if req.max_new_tokens <= 1 or (
+                req.eos_id is not None and tok == req.eos_id):
+            self._retire(slot)  # finished at prefill: reclaim pages now
+        else:
+            self.next_token[slot] = tok
+            self.slot_remaining[slot] = req.max_new_tokens - 1
+            self.slot_phase[slot] = _DECODE
+
+    def _advance_prefill(self, slot: int):
+        """Run one prompt chunk for a prefilling slot (per-slot path,
+        batched_prefill=False)."""
         req = self.slot_req[slot]
         prompt = np.asarray(req.prompt, np.int32)
-        remaining = len(prompt) - int(self.slot_cursor[slot])
-        sizes = self._chunk_sizes(remaining)
-        if max_chunks is not None:
-            sizes = sizes[:max_chunks]
-        ran = False
-        logits = None
-        for c in sizes:
-            lo = int(self.slot_cursor[slot])
-            tokens = jnp.asarray(prompt[None, lo:lo + c])
-            cache = self._refresh_meta(self.cache)
-            logits, self.cache = self._chunk(self.params, tokens, cache,
-                                             jnp.int32(slot))
-            self.slot_cursor[slot] += c
-            self.lengths[slot] += c
-            ran = True
+        lo = int(self.slot_cursor[slot])
+        size = self._next_chunk(slot)
+        if self.paged:
+            self._ensure_writable(slot, lo, lo + size)
+        tokens = jnp.asarray(prompt[None, lo:lo + size])
+        cache = self._refresh_meta(self.cache)
+        logits, self.cache = self._chunk(self.params, tokens, cache,
+                                         jnp.int32(slot))
+        sizes = self.stats["prefill_batch_sizes"]
+        sizes[1] = sizes.get(1, 0) + 1
+        self.slot_cursor[slot] += size
+        self.lengths[slot] += size
+        self._register_pages(slot)
         if int(self.slot_cursor[slot]) >= len(prompt):
-            # prompt complete: sample the first token from the last chunk
             tok = int(self._sample(logits[:, -1], [slot])[0])
-            req.out_tokens.append(tok)
-            if req.max_new_tokens <= 1 or (
-                    req.eos_id is not None and tok == req.eos_id):
-                self._retire(slot)  # finished at prefill: reclaim pages now
-            else:
-                self.next_token[slot] = tok
-                self.slot_remaining[slot] = req.max_new_tokens - 1
-                self.slot_phase[slot] = _DECODE
-        return ran
+            self._finish_prompt(slot, tok)
+
+    def _run_chunk_group(self, slots: List[int], size: int):
+        """Advance every slot in `slots` by one chunk of `size` tokens in
+        a single [batch_slots, size] program (cross-slot batched prefill).
+        Non-group rows are masked: their length/block-table metadata is
+        zeroed (paged writes land on the trash page) and the model reverts
+        their batch-dim state rows against the input cache."""
+        tokens = np.zeros((self.B, size), np.int32)
+        for s in slots:
+            lo = int(self.slot_cursor[s])
+            tokens[s] = np.asarray(self.slot_req[s].prompt,
+                                   np.int32)[lo:lo + size]
+            if self.paged:
+                self._ensure_writable(s, lo, lo + size)
+        active = np.zeros(self.B, bool)
+        active[slots] = True
+        cache_in = self._refresh_meta(self.cache, active)
+        logits, self.cache = self._chunk_batched(
+            self.params, jnp.asarray(tokens), cache_in, jnp.asarray(active))
+        sizes = self.stats["prefill_batch_sizes"]
+        sizes[len(slots)] = sizes.get(len(slots), 0) + 1
+        for s in slots:
+            self.slot_cursor[s] += size
+            self.lengths[s] += size
+            self._register_pages(s)
+        done = [s for s in slots if int(self.slot_cursor[s])
+                >= len(self.slot_req[s].prompt)]
+        if done:
+            # sample over the fixed [B, V] batch (same trace as decode);
+            # rows of unfinished slots draw from dummy keys, discarded
+            live = np.zeros(self.B, bool)
+            live[done] = True
+            toks = self._sample(logits, list(range(self.B)), live=live)
+            for s in done:
+                self._finish_prompt(s, int(toks[s]))
 
     def _fill_slots(self) -> bool:
         """Admission + prefill progression for one engine step.  The
         per-step chunk budget applies per request: a request retiring at
         prefill frees its slot for the next queued one within the same
-        step (so eos-at-prefill bursts never burn decode iterations)."""
+        step (so eos-at-prefill bursts never burn decode iterations).
+        With batched_prefill, all slots whose next chunk shares a bucket
+        size advance in one program per pass."""
         budget = self.prefill_chunks_per_step or None
         ran = False
-        advanced = set()  # request ids already given their budget this step
+        used: Dict[int, int] = {}  # chunks run per request this step
         while True:
-            self._admit()
+            admitted = self._admit()
             todo = [s for s in range(self.B)
                     if self.slot_phase[s] == _PREFILL
-                    and id(self.slot_req[s]) not in advanced]
+                    and (budget is None
+                         or used.get(id(self.slot_req[s]), 0) < budget)]
             if not todo:
-                break
-            for slot in todo:
-                advanced.add(id(self.slot_req[slot]))
-                if self._advance_prefill(slot, budget):
-                    ran = True
+                if not admitted:
+                    break
+                continue
+            for s in todo:
+                used[id(self.slot_req[s])] = \
+                    used.get(id(self.slot_req[s]), 0) + 1
+            if self.batched_prefill:
+                groups: Dict[int, List[int]] = {}
+                for s in todo:
+                    groups.setdefault(self._next_chunk(s), []).append(s)
+                for size in sorted(groups, reverse=True):
+                    self._run_chunk_group(groups[size], size)
+            else:
+                for s in todo:
+                    self._advance_prefill(s)
+            ran = True
         return ran
 
     def step(self) -> bool:
@@ -504,6 +1018,10 @@ class ServingEngine:
         decode_mask = self.slot_phase == _DECODE
         if not decode_mask.any():
             return bool((self.slot_phase == _PREFILL).any())
+        if self.paged:
+            for s in np.nonzero(decode_mask)[0]:
+                pos = int(self.lengths[s])
+                self._ensure_writable(int(s), pos, pos + 1)
         cache_in = self._refresh_meta(self.cache, decode_mask)
         logits, new_cache = self._decode(
             self.params, jnp.asarray(self.next_token), cache_in)

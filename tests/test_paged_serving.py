@@ -1,6 +1,8 @@
 """Paged posit-KV serving runtime: kernel-vs-reference parity, paged-vs-
 dense token parity across model families and KV formats, page reclamation
-(no stale-key leakage), bucketed-prefill compile counts, and the sampler.
+(no stale-key leakage), prefix sharing (refcounted pages, copy-on-write,
+bit-identical to unshared serving), batched cross-slot prefill,
+bucketed-prefill compile counts, and the sampler.
 
 All Pallas kernels run in interpret mode on CPU."""
 import numpy as np
@@ -243,6 +245,185 @@ def test_interleaved_chunked_prefill_matches_admission_prefill(rng):
 
 
 # ---------------------------------------------------------------------------
+# prefix sharing: refcounted pages, copy-on-write, token parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["command_r_35b", "qwen3_moe_235b",
+                                  "jamba_1_5_large"])
+@pytest.mark.parametrize("kv", ["f32", "coded"])
+def test_prefix_sharing_token_parity(rng, arch, kv):
+    """Requests sharing a prompt prefix map the donor's pages (refcounted)
+    and produce bit-identical tokens to unshared serving, across attention
+    families and KV formats.  Chain: sharing stops at boundaries of the
+    request's own chunk decomposition, so the tail's chunking — and every
+    logit — matches an unshared run exactly."""
+    quant = QuantPolicy(weights=P16_2) if kv == "f32" else \
+        QuantPolicy(weights=P16_2, kv_cache=P8_2)
+    cfg = _tiny(arch, quant)
+    params = api.init(jax.random.key(0), cfg)
+    base = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    prompts = [np.concatenate([base, rng.integers(0, cfg.vocab_size, t)
+                               .astype(np.int32)]) for t in (3, 5)]
+    prompts.append(prompts[0].copy())  # exact duplicate
+    kw = dict(max_new=4, page_size=4, prefill_buckets=(4, 1))
+    shared, es = _serve(cfg, params, prompts, **kw)
+    unshared, eu = _serve(cfg, params, prompts, prefix_sharing=False, **kw)
+    assert shared == unshared
+    assert es.stats["shared_admissions"] >= 2
+    assert es.stats["pages_shared"] >= 4
+    # the whole point: fewer fresh page grants than unshared serving
+    assert es.allocator.total_allocs < eu.allocator.total_allocs
+    # everything reclaims: refcounts, holds, and index all drain
+    assert es.pages_in_use == 0 and not es.prefix_index and not es._held
+
+
+def test_cow_fork_never_mutates_shared_page(rng):
+    """An exact-duplicate request maps the donor's partially-filled tail
+    page; its divergent write (last prompt token, then decode) must fork a
+    private copy and leave the donor's page bit-identical — pinned with a
+    direct page-pool readback, not just token parity."""
+    cfg = _tiny("command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P8_2))
+    params = api.init(jax.random.key(0), cfg)
+    prompt = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+
+    engine = ServingEngine(cfg, params, batch_slots=2, max_seq=32,
+                           page_size=4, prefill_buckets=(4, 1))
+    engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=12))
+    engine.step()  # donor prefilled + decoding; index holds its pages
+    donor_pages = list(engine.slot_pages[0])
+    tail_page = donor_pages[2]  # positions 8..11: prompt tail + decode
+    snap_k = np.asarray(engine.cache["k"][:, tail_page])
+    snap_v = np.asarray(engine.cache["v"][:, tail_page])
+
+    engine.submit(Request(rid=1, prompt=prompt, max_new_tokens=3))
+    engine.step()  # sharer admitted, COW-forks the tail page, decodes
+    assert engine.stats["cow_forks"] == 1
+    # the sharer's block table diverged from the donor's on the tail page
+    assert engine.block_tables[1, 2] != tail_page
+    assert engine.block_tables[1, 0] == donor_pages[0]
+    assert engine.block_tables[1, 1] == donor_pages[1]
+    # direct pool readback: the shared page holds exactly the donor's KV
+    # below the sharer's trusted range (positions 8..9 of the prompt);
+    # the donor keeps appending its own decode KV in place past it
+    ps = engine.layout.page_size
+    tail_lo = 2 * ps
+    valid = min(int(engine.lengths[0]), 11) - tail_lo  # prompt rows only
+    np.testing.assert_array_equal(
+        np.asarray(engine.cache["k"][:, tail_page, :2]), snap_k[:, :2])
+    np.testing.assert_array_equal(
+        np.asarray(engine.cache["v"][:, tail_page, :2]), snap_v[:, :2])
+    assert valid >= 2
+
+    out = {r.rid: r.out_tokens for r in engine.run()}
+    for rid, mn in ((0, 12), (1, 3)):
+        fresh = ServingEngine(cfg, params, batch_slots=2, max_seq=32,
+                              page_size=4, prefill_buckets=(4, 1))
+        fresh.submit(Request(rid=rid, prompt=prompt, max_new_tokens=mn))
+        assert out[rid] == fresh.run()[0].out_tokens, rid
+    assert engine.pages_in_use == 0
+
+
+def test_shared_prefix_pages_allocated_once(rng):
+    """N requests with the same prompt allocate the shared-prefix pages
+    once: total fresh grants stay near a single request's demand (the
+    acceptance bar the bench gate also checks)."""
+    cfg = _tiny("command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P8_2))
+    params = api.init(jax.random.key(0), cfg)
+    # 46-token prompt over 4-token pages: 11 full prefix pages share, the
+    # tail page is COW-forked per sharer, decode stays inside it
+    prompt = rng.integers(0, cfg.vocab_size, 46).astype(np.int32)
+
+    def allocs(n_req, sharing):
+        eng = ServingEngine(cfg, params, batch_slots=2, max_seq=48,
+                            page_size=4, prefill_buckets=(16, 4, 1),
+                            prefix_sharing=sharing)
+        for i in range(n_req):
+            eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=2))
+        done = eng.run()
+        assert len(done) == n_req and eng.pages_in_use == 0
+        return eng.allocator.total_allocs
+
+    single = allocs(1, True)
+    assert allocs(4, True) < 1.5 * single < allocs(4, False)
+
+
+def test_held_prefix_pages_yield_to_blocked_admission(rng):
+    """Pages held for a queued sharer must not starve a non-sharing
+    request that needs the whole pool: when admission stalls with nothing
+    in flight, holds yield (liveness over sharing) and every request still
+    serves, token-identical to fresh runs."""
+    cfg = _tiny("command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P8_2))
+    params = api.init(jax.random.key(0), cfg)
+    donor = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+    sharer = np.concatenate([donor[:8],
+                             rng.integers(0, cfg.vocab_size, 2)
+                             .astype(np.int32)])
+    big = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)  # 6 pages
+
+    engine = ServingEngine(cfg, params, batch_slots=1, max_seq=32,
+                           page_size=4, n_pages=7, prefill_buckets=(4, 1))
+    engine.submit(Request(rid=0, prompt=donor, max_new_tokens=2))
+    # donor retires first; its prefix pages are held for rid=2's benefit
+    # while rid=1 (queued ahead) needs the entire pool
+    engine.submit(Request(rid=1, prompt=big, max_new_tokens=4))
+    engine.submit(Request(rid=2, prompt=sharer, max_new_tokens=2))
+    out = {r.rid: r.out_tokens for r in engine.run()}
+    assert set(out) == {0, 1, 2}
+    for rid, prompt, mn in ((0, donor, 2), (1, big, 4), (2, sharer, 2)):
+        fresh = ServingEngine(cfg, params, batch_slots=1, max_seq=32,
+                              page_size=4, n_pages=7,
+                              prefill_buckets=(4, 1))
+        fresh.submit(Request(rid=rid, prompt=prompt, max_new_tokens=mn))
+        assert out[rid] == fresh.run()[0].out_tokens, rid
+    assert engine.pages_in_use == 0 and not engine._held
+
+
+def test_page_allocator_refcounts():
+    """Sharing takes references, free drops them, recycle only at zero;
+    double frees and shares of free pages raise instead of corrupting."""
+    a = PageAllocator(6)
+    got = a.alloc(2)
+    assert a.total_allocs == 2 and all(a.refcount(p) == 1 for p in got)
+    a.share(got)
+    assert all(a.refcount(p) == 2 for p in got)
+    assert a.free(got) == []          # refs survive: nothing recycled
+    assert a.pages_in_use == 2
+    assert sorted(a.free(got)) == sorted(got)  # last ref: recycled
+    assert a.pages_in_use == 0
+    with pytest.raises(ValueError, match="double free"):
+        a.free([got[0]])
+    with pytest.raises(ValueError, match="share free"):
+        a.share([got[0]])
+
+
+def test_joint_oversubscription_with_sharing(rng):
+    """Two requests that individually fit but jointly oversubscribe the
+    pool: admission accounts the full private demand (including the
+    copy-on-write fork reserve) up front instead of checking each request
+    in isolation, so the sharer never allocates mid-flight — both serve to
+    completion, token-identical to fresh runs, and the pool drains."""
+    cfg = _tiny("command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P8_2))
+    params = api.init(jax.random.key(0), cfg)
+    prompt = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+    # donor needs 4 pages (11 + 6 - 2 -> positions 0..15), duplicate needs
+    # 4 alone: jointly 8 > capacity 6, individually 4 <= 6
+    engine = ServingEngine(cfg, params, batch_slots=2, max_seq=16,
+                           page_size=4, n_pages=7, prefill_buckets=(4, 1))
+    engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    engine.submit(Request(rid=1, prompt=prompt, max_new_tokens=6))
+    assert engine.pages_promised == 8 > engine.allocator.capacity
+    out = {r.rid: r.out_tokens for r in engine.run()}
+    assert len(out) == 2
+    fresh = ServingEngine(cfg, params, batch_slots=1, max_seq=16,
+                          page_size=4, n_pages=7, prefill_buckets=(4, 1))
+    fresh.submit(Request(rid=9, prompt=prompt, max_new_tokens=6))
+    want = fresh.run()[0].out_tokens
+    assert out[0] == want and out[1] == want
+    assert engine.pages_in_use == 0 and not engine._held
+
+
+# ---------------------------------------------------------------------------
 # bucketed prefill: compile count O(#buckets), not O(#lengths)
 # ---------------------------------------------------------------------------
 
@@ -251,7 +432,8 @@ def test_prefill_compiles_per_bucket_not_per_length(rng):
     cfg = _tiny("command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P8_2))
     params = api.init(jax.random.key(0), cfg)
     engine = ServingEngine(cfg, params, batch_slots=2, max_seq=32,
-                           page_size=4, prefill_buckets=(16, 4, 1))
+                           page_size=4, prefill_buckets=(16, 4, 1),
+                           batched_prefill=False)
     lengths = [3, 5, 7, 9, 11, 13, 6, 10, 14, 8]  # 10 distinct lengths
     for i, n in enumerate(lengths):
         engine.submit(Request(
@@ -260,6 +442,61 @@ def test_prefill_compiles_per_bucket_not_per_length(rng):
     done = engine.run()
     assert len(done) == len(lengths)
     assert engine._chunk._cache_size() <= len(engine.prefill_buckets)
+
+
+def test_batched_prefill_compiles_per_bucket_not_per_slot_count(rng):
+    """Cross-slot batched prefill keeps the compile count O(#buckets): the
+    [batch_slots, chunk] program shape is fixed however many slots fill
+    per step (non-group rows are masked), so a mixed-length queue over 4
+    slots with variable group sizes traces at most one program per
+    bucket — and the fleet actually batches (multi-slot groups occur)."""
+    cfg = _tiny("command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P8_2))
+    params = api.init(jax.random.key(0), cfg)
+    engine = ServingEngine(cfg, params, batch_slots=4, max_seq=32,
+                           page_size=4, prefill_buckets=(16, 4, 1),
+                           prefill_chunks_per_step=1)
+    lengths = [3, 5, 7, 9, 11, 13, 6, 10, 14, 8, 12, 4]
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lengths]
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=2))
+    done = engine.run()
+    assert len(done) == len(lengths)
+    assert engine._chunk_batched._cache_size() <= len(engine.prefill_buckets)
+    assert engine._chunk._cache_size() == 0  # per-slot path never used
+    assert max(engine.stats["prefill_batch_sizes"]) > 1  # real batching
+    # parity: the batched fleet decodes exactly what per-slot serving does
+    per_slot = ServingEngine(cfg, params, batch_slots=4, max_seq=32,
+                             page_size=4, prefill_buckets=(16, 4, 1),
+                             prefill_chunks_per_step=1,
+                             batched_prefill=False)
+    for i, p in enumerate(prompts):
+        per_slot.submit(Request(rid=i, prompt=p, max_new_tokens=2))
+    got = {r.rid: r.out_tokens for r in per_slot.run()}
+    assert got == {r.rid: r.out_tokens for r in done}
+
+
+def test_batched_prefill_auto_disabled_for_droppy_moe_capacity():
+    """Routed-MoE capacity is computed over the whole batched chunk, so
+    batch composition could displace active tokens when the capacity
+    factor is not drop-proof — the engine falls back to per-slot prefill
+    there unless explicitly overridden; drop-proof configs keep batching."""
+    droppy = configs.get_smoke("qwen3_moe_235b").replace(
+        quant=QuantPolicy(weights=P16_2, kv_cache=P8_2))
+    assert droppy.capacity_factor * droppy.top_k < droppy.n_experts
+    params = api.init(jax.random.key(0), droppy)
+    eng = ServingEngine(droppy, params, batch_slots=2, max_seq=32,
+                        page_size=4)
+    assert eng.batched_prefill is False
+    forced = ServingEngine(droppy, params, batch_slots=2, max_seq=32,
+                           page_size=4, batched_prefill=True)
+    assert forced.batched_prefill is True
+    proof = _tiny("qwen3_moe_235b", QuantPolicy(weights=P16_2,
+                                                kv_cache=P8_2))
+    assert proof.capacity_factor * proof.top_k >= proof.n_experts
+    eng2 = ServingEngine(proof, api.init(jax.random.key(0), proof),
+                         batch_slots=2, max_seq=32, page_size=4)
+    assert eng2.batched_prefill is True
 
 
 def test_ssm_buckets_respect_ssd_chunk():

@@ -1,0 +1,177 @@
+"""Property/fuzz hardening for the serving scheduler (hypothesis).
+
+The paged engine is now a real scheduler — refcounted page allocator,
+prefix-sharing index with copy-on-write, batched cross-slot prefill,
+interleaved chunks, eos-at-prefill retirement, oversubscribed admission —
+so its correctness surface is pinned as laws over random workloads rather
+than example-driven point checks:
+
+  * PageAllocator: alloc/share/free round-trips never double-free, never
+    hand out the trash page, conserve `in_use + free == capacity`, and
+    keep the peak monotone.
+  * Scheduler: random queues (mixed lengths, shared/duplicate prefixes,
+    eos-at-prefill, single-token budgets, oversubscribed pools) decode
+    token-identical to the dense reference engine, and every page, hold,
+    and prefix-index entry reclaims once the queue drains.
+
+Runs under the fixed-seed `ci` hypothesis profile in CI (tests/conftest.py)
+so a red run replays locally byte for byte.
+"""
+import numpy as np
+import jax
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.core.quant import QuantPolicy
+from repro.core.formats import P16_2, P8_2
+from repro.models import api
+from repro.serve import PageAllocator, Request, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator properties (pure host state, no device work)
+# ---------------------------------------------------------------------------
+
+
+@given(n_pages=st.integers(2, 24), data=st.data())
+@settings(max_examples=150, deadline=None)
+def test_allocator_invariants_under_random_ops(n_pages, data):
+    """Random alloc/share/free interleavings conserve the pool: the trash
+    page is never granted, every live page is unique, in_use + free ==
+    capacity at every step, and the peak high-watermark is monotone."""
+    a = PageAllocator(n_pages)
+    live = {}  # page -> refcount we believe it has
+    peak_seen = 0
+    for _ in range(data.draw(st.integers(1, 40))):
+        op = data.draw(st.sampled_from(["alloc", "share", "free"]))
+        if op == "alloc":
+            n = data.draw(st.integers(0, n_pages))
+            got = a.alloc(n)
+            if n > a.capacity - sum(1 for _ in live):
+                assert got is None, "oversubscribing alloc must refuse"
+            if got is None:
+                continue
+            assert len(got) == n and 0 not in got
+            assert not (set(got) & set(live)), "granted a live page twice"
+            for p in got:
+                live[p] = 1
+        elif op == "share" and live:
+            p = data.draw(st.sampled_from(sorted(live)))
+            a.share([p])
+            live[p] += 1
+        elif op == "free" and live:
+            p = data.draw(st.sampled_from(sorted(live)))
+            recycled = a.free([p])
+            live[p] -= 1
+            if live[p] == 0:
+                assert recycled == [p]
+                del live[p]
+            else:
+                assert recycled == []
+        assert a.pages_in_use + a.pages_free == a.capacity
+        assert a.pages_in_use == len(live)
+        for p, rc in live.items():
+            assert a.refcount(p) == rc
+        assert a.peak_in_use >= peak_seen, "peak must be monotone"
+        peak_seen = a.peak_in_use
+    # drain completely: every page recycles exactly once
+    for p, rc in list(live.items()):
+        recycled = a.free([p] * rc)
+        assert recycled == [p]
+    assert a.pages_free == a.capacity and a.pages_in_use == 0
+
+
+@given(n_pages=st.integers(2, 16))
+@settings(max_examples=50, deadline=None)
+def test_allocator_rejects_double_free_and_free_share(n_pages):
+    a = PageAllocator(n_pages)
+    got = a.alloc(a.capacity)
+    assert got is not None and a.alloc(1) is None
+    a.free(got)
+    with pytest.raises(ValueError, match="double free"):
+        a.free([got[0]])
+    with pytest.raises(ValueError, match="share free"):
+        a.share([got[0]])
+
+
+# ---------------------------------------------------------------------------
+# scheduler fuzz: random queues vs the dense reference engine
+# ---------------------------------------------------------------------------
+
+_PS = 4  # page size under fuzz
+
+
+def _model():
+    if not hasattr(_model, "cache"):
+        cfg = configs.get_tiny_serving(
+            "command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P8_2))
+        params = api.init(jax.random.key(0), cfg)
+        _model.cache = (cfg, params)
+    return _model.cache
+
+
+# two fixed base prefixes requests may share (page-aligned and not)
+_BASES = (np.arange(8, dtype=np.int32) % 61,
+          (np.arange(5, dtype=np.int32) * 7 + 3) % 61)
+
+
+@st.composite
+def _queues(draw):
+    reqs = []
+    for rid in range(draw(st.integers(1, 5))):
+        kind = draw(st.sampled_from(["fresh", "shared", "dup"]))
+        if kind == "fresh":
+            n = draw(st.integers(1, 14))
+            prompt = np.array([draw(st.integers(0, 60)) for _ in range(n)],
+                              np.int32)
+        else:
+            base = _BASES[draw(st.integers(0, 1))]
+            tail = ([] if kind == "dup" else
+                    [draw(st.integers(0, 60))
+                     for _ in range(draw(st.integers(0, 6)))])
+            prompt = np.concatenate([base, np.asarray(tail, np.int32)])
+        max_new = draw(st.integers(1, 4))
+        # eos drawn from the prompt sometimes fires mid-decode or right at
+        # prefill (the sampled token is never masked against it)
+        eos = (int(prompt[draw(st.integers(0, len(prompt) - 1))])
+               if draw(st.booleans()) else None)
+        reqs.append(dict(rid=rid, prompt=prompt, max_new_tokens=max_new,
+                         eos_id=eos))
+    slack = draw(st.integers(0, 5))
+    chunks_per_step = draw(st.sampled_from([0, 1, 2]))
+    return reqs, slack, chunks_per_step
+
+
+@given(q=_queues())
+@settings(max_examples=8, deadline=None)
+def test_scheduler_fuzz_matches_dense_reference(q):
+    """Any random queue — mixed lengths, shared/duplicate prefixes, eos at
+    prefill, oversubscribed pools, interleaved chunking — decodes
+    token-identical to the dense reference engine, and the paged engine
+    reclaims every page, hold, and index entry once the queue drains."""
+    reqs, slack, chunks_per_step = q
+    cfg, params = _model()
+    # pool: just enough for the largest request plus a little slack, so
+    # queues routinely oversubscribe and wait for reclamation
+    max_need = max((len(r["prompt"]) + r["max_new_tokens"] - 2) // _PS + 1
+                   for r in reqs)
+    kw = dict(batch_slots=2, max_seq=32, prefill_buckets=(4, 1),
+              prefill_chunks_per_step=chunks_per_step)
+    paged = ServingEngine(cfg, params, page_size=_PS,
+                          n_pages=max_need + 1 + slack, **kw)
+    dense = ServingEngine(cfg, params, paged=False, **kw)
+    for eng in (paged, dense):
+        for r in reqs:
+            eng.submit(Request(**{**r, "prompt": r["prompt"].copy()}))
+    got = {r.rid: r.out_tokens for r in paged.run()}
+    want = {r.rid: r.out_tokens for r in dense.run()}
+    assert got == want
+    assert len(got) == len(reqs)
+    assert paged.pages_in_use == 0 and paged.pages_free \
+        == paged.allocator.capacity
+    assert not paged.prefix_index and not paged._held
+    assert not paged.allocator._refs
+    assert all(not p for p in paged.slot_pages)
