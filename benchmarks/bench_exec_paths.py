@@ -42,9 +42,15 @@ Three further sections:
                      once); token parity with unshared serving rides
                      along.  Prefill device calls shrink too (batched
                      cross-slot chunks + skipped shared prefixes).
+  sharded scaling  : the same shared-prefix queue over a kv_pages-sharded
+                     page pool at mesh sizes 1/2/4 (each in a subprocess
+                     with that many forced host devices) — per-device page
+                     budgets and tok/s per size, gated on cross-topology
+                     token parity and full per-device reclamation.
 
 Results are also written as machine-readable BENCH_exec_paths.json
-(latency + storage per plan; the CI artifact).
+(latency + storage per plan; the CI artifact, with a committed baseline
+pinning the schema).
 
     PYTHONPATH=src python benchmarks/bench_exec_paths.py
 """
@@ -214,6 +220,90 @@ def bench_prefix_sharing(rng, n_req=4):
     }
 
 
+def bench_sharded_scaling(mesh_sizes=(1, 2, 4)):
+    """Sharded paged-KV serving scaling: the same mixed shared-prefix
+    queue served with the page pool split over 1/2/4 devices.
+
+    Each mesh size runs in a subprocess with that many forced host
+    devices (XLA_FLAGS must precede jax init, the test_distributed.py
+    idiom).  Interpret-mode CPU wall time measures dispatch + collective
+    overhead, not TPU performance — the committed baseline pins the
+    schema and the cross-topology invariant: every mesh size emits
+    token-identical streams and reports its per-device page budget and
+    occupancy."""
+    import json
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = textwrap.dedent("""
+        import json, time
+        import jax, numpy as np
+        from repro import configs
+        from repro.core.formats import P16_1, P16_2
+        from repro.core.quant import QuantPolicy
+        from repro.models import api
+        from repro.serve import Request, ServingEngine
+
+        n = {n}
+        cfg = configs.get_tiny_serving(
+            "command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P16_1))
+        params = api.init(jax.random.key(0), cfg)
+        mesh = None
+        if n > 1:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(n)
+        rng = np.random.default_rng(0)
+        system = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        prompts = [np.concatenate([system, rng.integers(
+            0, cfg.vocab_size, 1 + (3 * i) % 7).astype(np.int32)])
+            for i in range(6)]
+        eng = ServingEngine(cfg, params, batch_slots=2, max_seq=32,
+                            page_size=4, mesh=mesh)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        a = eng.allocator
+        print("RESULT " + json.dumps({{
+            "mesh_size": n,
+            "kv_shards": eng.n_shards,
+            "tokens": toks,
+            "tokens_per_s": toks / dt,
+            "pages_per_device": a.pages_per_shard - 1,
+            "pool_pages": eng.layout.n_pages,
+            "peak_pages_in_use": a.peak_in_use,
+            "pages_in_use_after_drain": a.pages_in_use,
+            "out": {{r.rid: list(r.out_tokens) for r in done}},
+        }}))
+    """)
+    rows = []
+    for n in mesh_sizes:
+        env = {**os.environ,
+               "XLA_FLAGS": f"--xla_force_host_platform_device_count={n}",
+               "PYTHONPATH": os.path.join(repo, "src")}
+        r = subprocess.run([sys.executable, "-c", code.format(n=n)],
+                           capture_output=True, text=True, env=env,
+                           timeout=600)
+        assert r.returncode == 0, f"mesh={n}\n{r.stdout}\n{r.stderr}"
+        line = [ln for ln in r.stdout.splitlines()
+                if ln.startswith("RESULT ")][-1]
+        rows.append(json.loads(line[len("RESULT "):]))
+    ref = rows[0].pop("out")
+    parity = all(row.pop("out") == ref for row in rows[1:])
+    return {
+        "queue": "6 requests, 8-token shared system prefix, mixed tails",
+        "rows": rows,
+        "token_parity_across_mesh_sizes": parity,
+        "pools_drained": all(r["pages_in_use_after_drain"] == 0
+                             for r in rows),
+    }
+
+
 def main():
     rng = np.random.default_rng(0)
     rows = []
@@ -275,6 +365,19 @@ def main():
           f"{share['cow_forks']} COW forks; token parity: "
           f"{share['token_parity_shared_vs_unshared']}")
 
+    # sharded pool scaling: pages/device + tok/s vs kv_pages mesh size
+    scaling = bench_sharded_scaling()
+    print("\nsharded paged-KV scaling "
+          f"({scaling['queue']}):")
+    print("mesh,kv_shards,pages_per_device,pool_pages,peak_pages,tok_s")
+    for r in scaling["rows"]:
+        print(f"{r['mesh_size']},{r['kv_shards']},{r['pages_per_device']},"
+              f"{r['pool_pages']},{r['peak_pages_in_use']},"
+              f"{r['tokens_per_s']:.1f}")
+    print(f"  token parity across mesh sizes: "
+          f"{scaling['token_parity_across_mesh_sizes']}  pools drained: "
+          f"{scaling['pools_drained']}")
+
     by_plan = {r[1]: r for r in rows[:2]}
     f32_w = by_plan["fake_quant"][5]
     packed_w = by_plan["fused"][5]
@@ -296,6 +399,10 @@ def main():
         "prefix_sharing_parity": share["token_parity_shared_vs_unshared"],
         "prefix_prefill_pages_2x": share["prefill_page_reduction"] >= 2.0,
         "prefix_pages_near_single": share["pages_vs_single_ratio"] < 1.5,
+        # sharded pool: every kv_pages mesh size emits identical tokens
+        # and reclaims its per-device budgets completely
+        "sharded_token_parity": scaling["token_parity_across_mesh_sizes"],
+        "sharded_pools_drained": scaling["pools_drained"],
     }
     print("checks:", checks)
     write_bench_json("exec_paths", {
@@ -314,6 +421,7 @@ def main():
         },
         "paged_serving": paged,
         "prefix_sharing": share,
+        "sharded_scaling": scaling,
         "checks": checks,
     })
     assert all(checks.values()), checks

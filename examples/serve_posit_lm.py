@@ -51,9 +51,17 @@ print(f"weights: {f32_bytes} B float -> {packed_bytes} B packed "
 with tempfile.TemporaryDirectory() as ckpt_dir:
     mgr = CheckpointManager(ckpt_dir)
     mgr.save(0, packed, extra=api.pack_manifest(cfg))
+    # shard the page pool when the runtime has >1 device (the CI
+    # multi-device leg forces 8 host devices): each device owns a
+    # contiguous global-page-id range with its own budget, block tables
+    # keep global ids, decode merges per-device softmax partials exactly
+    mesh = None
+    if jax.device_count() > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(2)
     engine = ServingEngine.from_checkpoint(cfg, ckpt_dir,
                                            batch_slots=4, max_seq=96,
-                                           page_size=16)
+                                           page_size=16, mesh=mesh)
     kv = engine.kv_cache_summary()
     print(f"engine resident: {engine.weight_bytes()} B weights; paged KV "
           f"pool {kv['kv_bytes']} B ({engine.cache['k'].dtype} codes, "
@@ -79,6 +87,11 @@ with tempfile.TemporaryDirectory() as ckpt_dir:
           f"({mid['kv_bytes_in_use']} B of coded KV backing tokens); "
           f"{engine.pages_shared_mapped} shared page refs mapped beyond "
           f"their first block table")
+    occ = engine.allocator.pages_in_use_by_shard
+    budget = engine.allocator.pages_per_shard - 1
+    print(f"per-device page occupancy ({engine.n_shards} shard(s), "
+          f"budget {budget} pages each): "
+          + " ".join(f"d{i}={u}/{budget}" for i, u in enumerate(occ)))
     done = engine.run()
     dt = time.perf_counter() - t0
     batches = engine.stats["prefill_batch_sizes"]

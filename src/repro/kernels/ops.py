@@ -79,13 +79,37 @@ def matmul_posit_weights_grouped(x, w_codes, fmt_w: PositFormat, **kw):
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
                     fmt_kv: PositFormat | None = None,
-                    softcap_val: float = 0.0):
+                    softcap_val: float = 0.0, page_ok=None,
+                    partials: bool = False):
     """Paged-attention decode: gather KV pages by block table, decode posit
     codes in-kernel next to the q·k dot, streaming softmax across pages.
-    See kernels/paged_attention.py; forward-only (decode hot path)."""
+    See kernels/paged_attention.py; forward-only (decode hot path).
+
+    page_ok masks pages out of the streaming softmax (a kv_pages shard
+    passes its ownership mask); partials=True returns the unnormalized
+    (o, m, l) state for cross-shard merging via `merge_attn_partials`."""
     return paged_attention_mod.paged_attention(
         q, k_pages, v_pages, block_tables, lengths, window,
-        fmt_kv=fmt_kv, softcap_val=softcap_val, interpret=_interpret())
+        fmt_kv=fmt_kv, softcap_val=softcap_val, interpret=_interpret(),
+        page_ok=page_ok, partials=partials)
+
+
+def merge_attn_partials(o, m, l, axis_name: str):
+    """Log-sum-exp merge of per-shard paged-attention partials.
+
+    Each kv_pages shard runs `paged_attention(..., partials=True)` over the
+    pages it owns, producing unnormalized output `o` [B,Hq,Dh], running max
+    `m` [B,Hq] and normalizer `l` [B,Hq].  Inside the serving shard_map this
+    rescales every shard's state to the global max and psums — algebraically
+    the kernel's own finalize, so when all of a slot's pages live on one
+    shard the result is bitwise identical to the unsharded kernel (the other
+    shards contribute w*l = 0).  Must run inside a shard_map binding
+    `axis_name`."""
+    m_max = jax.lax.pmax(m, axis_name)
+    w = jnp.exp(m - m_max)
+    l_tot = jax.lax.psum(l * w, axis_name)
+    o_tot = jax.lax.psum(o * w[..., None], axis_name)
+    return o_tot / jnp.maximum(l_tot, 1e-30)[..., None]
 
 
 def pdpu_matmul(a_codes, b_codes, cfg: PDPUConfig, **kw):

@@ -56,11 +56,14 @@ def _softcap(x, cap: float):
     return cap * jnp.tanh(x / cap)
 
 
-def _paged_attention_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref,
-                            out_ref, m_scr, l_scr, o_scr, *,
-                            fmt_kv: PositFormat | None, page_size: int,
-                            n_heads: int, n_kv_heads: int, head_dim: int,
-                            softcap_val: float):
+def _paged_attention_kernel(bt_ref, len_ref, win_ref, ok_ref, q_ref, k_ref,
+                            v_ref, *refs, fmt_kv: PositFormat | None,
+                            page_size: int, n_heads: int, n_kv_heads: int,
+                            head_dim: int, softcap_val: float, partials: bool):
+    if partials:
+        out_ref, m_ref, l_ref, m_scr, l_scr, o_scr = refs
+    else:
+        (out_ref, m_scr, l_scr, o_scr), m_ref, l_ref = refs, None, None
     b = pl.program_id(0)
     p = pl.program_id(1)
     G = n_heads // n_kv_heads
@@ -90,7 +93,7 @@ def _paged_attention_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref,
     length = len_ref[b]
     pos = p * page_size + jax.lax.iota(jnp.int32, page_size)
     q_pos = length - 1  # the query token sits at the last written position
-    mask = (pos < length) & ((q_pos - pos) < win_ref[0])
+    mask = (pos < length) & ((q_pos - pos) < win_ref[0]) & (ok_ref[b, p] > 0)
     s = jnp.where(mask[None, None, :], s, _NEG)
 
     m_prev, l_prev, o_prev = m_scr[...], l_scr[...], o_scr[...]
@@ -104,17 +107,26 @@ def _paged_attention_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref,
 
     @pl.when(p == pl.num_programs(1) - 1)
     def _finalize():
-        o = o_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
-        out_ref[0] = o.reshape(n_heads, head_dim)
+        if partials:
+            # leave the streaming state unnormalized: (o, m, l) per slot, to
+            # be log-sum-exp merged across kv_pages shards (ops.
+            # merge_attn_partials) before the single final normalization
+            out_ref[0] = o_scr[...].reshape(n_heads, head_dim)
+            m_ref[0] = m_scr[...].reshape(n_heads)
+            l_ref[0] = l_scr[...].reshape(n_heads)
+        else:
+            o = o_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+            out_ref[0] = o.reshape(n_heads, head_dim)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("fmt_kv", "softcap_val", "interpret"),
+    static_argnames=("fmt_kv", "softcap_val", "interpret", "partials"),
 )
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
                     fmt_kv: PositFormat | None = None,
-                    softcap_val: float = 0.0, interpret: bool = False):
+                    softcap_val: float = 0.0, interpret: bool = False,
+                    page_ok=None, partials: bool = False):
     """Single-token attention over block-table-paged, posit-coded KV.
 
     q            : [B, Hq, Dh] float query (one decode token per slot).
@@ -126,8 +138,18 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
     lengths      : [B] int32 valid positions per slot *including* the
                    current token (written by the caller before this call).
     window       : [1] int32 sliding-window size (>= max_seq = unbounded).
+    page_ok      : optional [B, max_pages] mask (nonzero = contribute).
+                   On a kv_pages-sharded pool each shard passes its
+                   ownership mask with block tables pre-localized, so the
+                   kernel only attends over the pages it physically holds.
+    partials     : return the unnormalized streaming-softmax state
+                   `(o [B,Hq,Dh], m [B,Hq], l [B,Hq])` instead of the
+                   normalized output — the per-shard contribution merged
+                   across shards by `ops.merge_attn_partials` (exactly the
+                   kernel's own finalize once merged, so a slot whose pages
+                   live on one shard is bitwise identical to partials=False).
 
-    Returns [B, Hq, Dh] f32.
+    Returns [B, Hq, Dh] f32, or the (o, m, l) triple when partials=True.
     """
     B, Hq, Dh = q.shape
     n_pages, page_size, kvd = k_pages.shape
@@ -139,19 +161,31 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
         raise ValueError(f"page feature dim {kvd} incompatible with "
                          f"q heads {Hq} x head_dim {Dh}")
     M = block_tables.shape[1]
+    if page_ok is None:
+        page_ok = jnp.ones((B, M), jnp.int32)
+
+    out_spec = pl.BlockSpec((1, Hq, Dh),
+                            lambda b, p, bt, ln, wn, ok: (b, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, Hq, Dh), jnp.float32)
+    if partials:
+        ml_spec = pl.BlockSpec((1, Hq), lambda b, p, bt, ln, wn, ok: (b, 0))
+        ml_shape = jax.ShapeDtypeStruct((B, Hq), jnp.float32)
+        out_specs = [out_spec, ml_spec, ml_spec]
+        out_shapes = [out_shape, ml_shape, ml_shape]
+    else:
+        out_specs, out_shapes = out_spec, out_shape
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(B, M),
         in_specs=[
-            pl.BlockSpec((1, Hq, Dh), lambda b, p, bt, ln, wn: (b, 0, 0)),
+            pl.BlockSpec((1, Hq, Dh), lambda b, p, bt, ln, wn, ok: (b, 0, 0)),
             pl.BlockSpec((1, page_size, kvd),
-                         lambda b, p, bt, ln, wn: (bt[b, p], 0, 0)),
+                         lambda b, p, bt, ln, wn, ok: (bt[b, p], 0, 0)),
             pl.BlockSpec((1, page_size, kvd),
-                         lambda b, p, bt, ln, wn: (bt[b, p], 0, 0)),
+                         lambda b, p, bt, ln, wn, ok: (bt[b, p], 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, Hq, Dh),
-                               lambda b, p, bt, ln, wn: (b, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((Hkv, Hq // Hkv), jnp.float32),
             pltpu.VMEM((Hkv, Hq // Hkv), jnp.float32),
@@ -160,14 +194,16 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
     )
     kernel = functools.partial(
         _paged_attention_kernel, fmt_kv=fmt_kv, page_size=page_size,
-        n_heads=Hq, n_kv_heads=Hkv, head_dim=Dh, softcap_val=softcap_val)
+        n_heads=Hq, n_kv_heads=Hkv, head_dim=Dh, softcap_val=softcap_val,
+        partials=partials)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hq, Dh), jnp.float32),
+        out_shape=out_shapes,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      window.astype(jnp.int32), q.astype(jnp.float32), k_pages, v_pages)
+      window.astype(jnp.int32), page_ok.astype(jnp.int32),
+      q.astype(jnp.float32), k_pages, v_pages)

@@ -23,6 +23,16 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_serving_mesh(n_devices: int = 0):
+    """1-D mesh over the first n devices (0 = all) on the 'model' axis —
+    the axis the sharding rules map kv_pages onto, so handing this to
+    ServingEngine(mesh=...) shards the paged KV pool n_devices ways."""
+    import numpy as np
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    return jax.sharding.Mesh(np.array(devs[:n]), ("model",))
+
+
 HW = {
     # TPU v5e-class target constants for the roofline (per chip)
     "peak_flops_bf16": 197e12,     # FLOP/s

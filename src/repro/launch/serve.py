@@ -35,6 +35,9 @@ def main():
                     help="temperature/top-k sampling instead of greedy")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--mesh-model", type=int, default=0,
+                    help="shard the paged KV pool over this many devices "
+                         "(0 = single-device pool)")
     args = ap.parse_args()
     if not args.sample and (args.temperature != 1.0 or args.top_k):
         raise SystemExit("--temperature/--top-k only take effect with "
@@ -45,11 +48,16 @@ def main():
     if cfg.is_encoder:
         raise SystemExit(f"{cfg.name} is encoder-only; nothing to serve")
     params = api.init(jax.random.key(0), cfg)
+    mesh = None
+    if args.mesh_model > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.mesh_model)
     engine = ServingEngine(cfg, params, batch_slots=args.slots,
                            max_seq=args.max_seq, paged=not args.dense,
                            page_size=args.page_size,
                            greedy=not args.sample,
-                           temperature=args.temperature, top_k=args.top_k)
+                           temperature=args.temperature, top_k=args.top_k,
+                           mesh=mesh)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(Request(
@@ -67,6 +75,11 @@ def main():
     print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s) kv dtype="
           f"{'posit' if cfg.quant.kv_cache else cfg.dtype} cache={layout}")
+    if engine.paged and engine.n_shards > 1:
+        occ = engine.allocator.pages_in_use_by_shard
+        per = engine.allocator.pages_per_shard - 1
+        print("[serve] per-device page occupancy: "
+              + " ".join(f"d{i}={u}/{per}" for i, u in enumerate(occ)))
 
 
 if __name__ == "__main__":

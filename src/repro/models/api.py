@@ -59,35 +59,43 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: Optional[int] = None):
     return _mod(cfg).prefill(params, batch, cfg, max_seq=max_seq)
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig):
+def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
+    """shard: optional paged.PageShard when the paged KV pool is sharded
+    along kv_pages and this call runs inside a shard_map over that axis
+    (block tables hold global page ids; see models/paged.py)."""
     if cfg.is_encoder:
         raise ValueError(f"{cfg.name} is encoder-only: no decode step")
-    return _mod(cfg).decode_step(params, tokens, cache, cfg)
+    return _mod(cfg).decode_step(params, tokens, cache, cfg, shard=shard)
 
 
-def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):
     """Process one prompt chunk [1, C] for one slot of a serving cache
     (dense or paged) at positions length[slot] + [0, C).  The serving
     engine's chunked-prefill path: fixed bucketed chunk shapes instead of
     a retrace per prompt length, writes straight into the slot's cache/
-    pages instead of a whole-cache splice."""
+    pages instead of a whole-cache splice.  shard: optional kv_pages
+    PageShard (inside a shard_map; see decode_step)."""
     if cfg.is_encoder:
         raise ValueError(f"{cfg.name} is encoder-only: no autoregressive serving")
-    return _mod(cfg).prefill_chunk(params, tokens, cache, slot, cfg)
+    return _mod(cfg).prefill_chunk(params, tokens, cache, slot, cfg,
+                                   shard=shard)
 
 
-def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig,
+                          shard=None):
     """Cross-slot batched chunked prefill: advance every active slot by one
     same-size chunk in a single [B, C] program.  tokens: [B, C] int32
     (inactive rows are padding); active: [B] bool.  The caller zeroes
     inactive rows' length/block-table metadata (paged writes land on the
     trash page); inactive rows of batch-dim state (dense KV, SSM/conv) are
     reverted internally.  One compile per chunk bucket — the serving
-    engine's batched-prefill path.  Returns (last-position logits [B, V],
-    cache')."""
+    engine's batched-prefill path.  shard: optional kv_pages PageShard
+    (inside a shard_map; see decode_step).  Returns (last-position logits
+    [B, V], cache')."""
     if cfg.is_encoder:
         raise ValueError(f"{cfg.name} is encoder-only: no autoregressive serving")
-    return _mod(cfg).prefill_chunk_batched(params, tokens, cache, active, cfg)
+    return _mod(cfg).prefill_chunk_batched(params, tokens, cache, active, cfg,
+                                           shard=shard)
 
 
 def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,

@@ -213,11 +213,13 @@ def prefill(params, batch, cfg: ModelConfig, max_seq=None):
     return logits, cache
 
 
-def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):
     """Chunked prefill for one slot: attention sub-layers write/gather the
     slot's KV (dense row or pages), mamba sub-layers carry the slot's
     conv/SSM states across chunks (see transformer/mamba prefill_chunk).
-    Returns the last position's logits [1, 1, V] only."""
+    Under a kv_pages shard only the KV pages are distributed; conv/SSM
+    states stay replicated.  Returns the last position's logits [1, 1, V]
+    only."""
     C = tokens.shape[1]
     x = common.embed_tokens(params["embed"], tokens, cfg)
     start = cache["length"][slot]
@@ -235,7 +237,7 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
                 attn, k_new, v_new = transformer._chunk_attn(
                     blk["attn"], x, cfg, k_l, v_l, start, bt_row=bt_row,
                     slot=None if bt_row is not None else slot,
-                    is_global=jnp.bool_(True))
+                    is_global=jnp.bool_(True), shard=shard)
                 x = x + attn
             else:
                 p = _sub(blk["mamba"], j - 1)
@@ -262,7 +264,8 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
     return logits, new_cache
 
 
-def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig,
+                          shard=None):
     """Cross-slot batched chunked prefill: attention sub-layers run the
     batched chunk attention over every slot's own pages/rows, mamba
     sub-layers carry all slots' conv/SSM states at once; inactive rows are
@@ -282,7 +285,7 @@ def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
             if j == 0:
                 attn, k_new, v_new = transformer._chunk_attn_batched(
                     blk["attn"], x, cfg, k_l, v_l, starts, bt=bt,
-                    is_global=jnp.bool_(True))
+                    is_global=jnp.bool_(True), shard=shard)
                 x = x + attn
             else:
                 p = _sub(blk["mamba"], j - 1)
@@ -315,10 +318,11 @@ def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
     return logits[:, 0], new_cache
 
 
-def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
+def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None):
     """Paged decode: attention sub-layers scatter the token's KV codes
     into the slot's current page and attend via the paged-attention
-    kernel; mamba/FFN sub-layers are unchanged."""
+    kernel; mamba/FFN sub-layers are unchanged (conv/SSM states stay
+    replicated under a kv_pages shard)."""
     length = cache["length"]
     bt = cache["block_table"]
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
@@ -332,7 +336,7 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
             if j == 0:
                 attn, k_new, v_new = transformer._paged_attn_token(
                     blk["attn"], x, cfg, k_l, v_l, bt, length,
-                    jnp.bool_(True))
+                    jnp.bool_(True), shard=shard)
                 x = x + attn
             else:
                 p = _sub(blk["mamba"], j - 1)
@@ -354,9 +358,11 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
                           "block_table": bt, "length": length + 1}
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig):
+def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
     if "block_table" in cache:
-        return _decode_step_paged(params, tokens, cache, cfg)
+        return _decode_step_paged(params, tokens, cache, cfg, shard=shard)
+    if shard is not None:
+        raise ValueError("kv_pages sharding requires a paged cache")
     B = tokens.shape[0]
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
     S_max = cache["k"].shape[2]

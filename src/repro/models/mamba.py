@@ -249,13 +249,17 @@ def prefill(params, batch, cfg: ModelConfig, max_seq=None):
     return logits, cache
 
 
-def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig,
+                  shard=None):
     """Chunked prefill for one slot: run the SSD forward over chunk
     `tokens` [1, C] seeded with the slot's carried conv/SSM states (the
     recurrence is exact under chunking — state in, state out).  Returns
     the last position's logits [1, 1, V] only.  Chunk sizes
     C > cfg.ssm_chunk must be multiples of it (the serving engine's
     bucket table guarantees this)."""
+    if shard is not None:
+        raise ValueError("ssm state is replicated; kv_pages sharding does "
+                         "not apply to the mamba family")
     C = tokens.shape[1]
     x = common.embed_tokens(params["embed"], tokens, cfg)
     conv_s = jax.lax.dynamic_slice_in_dim(cache["conv"], slot, 1, axis=1)
@@ -279,12 +283,16 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
     return logits, new_cache
 
 
-def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig,
+                          shard=None):
     """Cross-slot batched chunked prefill: every active slot advances one
     chunk [B, C] through the SSD forward seeded with its own carried
     conv/SSM state; inactive rows compute on padding and are reverted
     against the input cache.  Returns (last-position logits [B, V],
     cache')."""
+    if shard is not None:
+        raise ValueError("ssm state is replicated; kv_pages sharding does "
+                         "not apply to the mamba family")
     B, C = tokens.shape
     x = common.embed_tokens(params["embed"], tokens, cfg)
 
@@ -306,7 +314,10 @@ def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
     return logits[:, 0], new_cache
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig):
+def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
+    if shard is not None:
+        raise ValueError("ssm state is replicated; kv_pages sharding does "
+                         "not apply to the mamba family")
     B = tokens.shape[0]
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
 

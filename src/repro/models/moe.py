@@ -252,7 +252,7 @@ def prefill(params, batch, cfg: ModelConfig, max_seq=None):
                     "length": jnp.full((B,), S, jnp.int32)}
 
 
-def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):
     """Chunked prefill with MoE FFN (see transformer.prefill_chunk;
     returns the last position's logits [1, 1, V] only).
 
@@ -269,7 +269,8 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
         p, is_global, k_l, v_l = xs
         attn, k_new, v_new = transformer._chunk_attn(
             p, x, cfg, k_l, v_l, start, bt_row=bt_row,
-            slot=None if bt_row is not None else slot, is_global=is_global)
+            slot=None if bt_row is not None else slot, is_global=is_global,
+            shard=shard)
         x = x + attn
         h = common.rms_norm(x, p["ln2"], upcast=not cfg.tp_bf16_reduce)
         ff, _ = moe_ffn(p, h, cfg)
@@ -288,7 +289,8 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
     return logits, new_cache
 
 
-def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig,
+                          shard=None):
     """Cross-slot batched chunked prefill with MoE FFN (see
     transformer.prefill_chunk_batched).  The capacity limit applies over
     the whole [B, C] batch; smoke-scale capacity factors are drop-proof
@@ -303,7 +305,8 @@ def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
     def body(x, xs):
         p, is_global, k_l, v_l = xs
         attn, k_new, v_new = transformer._chunk_attn_batched(
-            p, x, cfg, k_l, v_l, starts, bt=bt, is_global=is_global)
+            p, x, cfg, k_l, v_l, starts, bt=bt, is_global=is_global,
+            shard=shard)
         x = x + attn
         h = common.rms_norm(x, p["ln2"], upcast=not cfg.tp_bf16_reduce)
         ff, _ = moe_ffn(p, h, cfg)
@@ -327,7 +330,7 @@ def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
     return logits[:, 0], new_cache
 
 
-def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
+def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None):
     """Paged decode with MoE FFN (see transformer._decode_step_paged)."""
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
     length = cache["length"]
@@ -337,7 +340,7 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
     def body(x, xs):
         p, is_global, k_l, v_l = xs
         attn, k_new, v_new = transformer._paged_attn_token(
-            p, x, cfg, k_l, v_l, bt, length, is_global)
+            p, x, cfg, k_l, v_l, bt, length, is_global, shard=shard)
         x = x + attn
         h = common.rms_norm(x, p["ln2"], upcast=not cfg.tp_bf16_reduce)
         ff, _ = moe_ffn(p, h, cfg)
@@ -354,10 +357,12 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
                           "length": length + 1}
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig):
+def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
     """One autoregressive step with MoE FFN."""
     if "block_table" in cache:
-        return _decode_step_paged(params, tokens, cache, cfg)
+        return _decode_step_paged(params, tokens, cache, cfg, shard=shard)
+    if shard is not None:
+        raise ValueError("kv_pages sharding requires a paged cache")
     B = tokens.shape[0]
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
     S_max = cache["k"].shape[2]

@@ -28,6 +28,33 @@ Invariants the serving engine maintains (and the kernels rely on):
     (a donor appending decode tokens past every sharer's trusted range)
     may land in place.
 
+Global page-id contract (kv_pages-sharded pools)
+------------------------------------------------
+
+When the pool is sharded along its page dimension over a mesh axis (the
+`kv_pages` rule in parallel/sharding.py), block tables keep addressing
+**global** page ids: the pool is conceptually still `[n_pages, ps, F]`,
+device (shard) `s` of `n_shards` physically holds the contiguous global-id
+range `[s*pages_per_shard, (s+1)*pages_per_shard)`, and
+
+    shard(g)  = g // pages_per_shard
+    local(g)  = g %  pages_per_shard
+    global(s, l) = s * pages_per_shard + l
+
+Every shard reserves its **local page 0** (global ids `s*pages_per_shard`)
+as a trash page: inside `shard_map`, a block-table entry this shard does
+not own localizes to its own trash page, so stray writes from other
+shards' pages land harmlessly and gathers of non-owned pages are masked
+(`localize_ids` returns the ownership mask).  Global page 0 remains the
+canonical trash page zeroed block-table rows point at — on shard 0 it *is*
+local page 0, on every other shard it is non-owned and redirects to that
+shard's own trash.  The allocator (serve.PageAllocator) never hands out
+any `g` with `g % pages_per_shard == 0`.
+
+The `shard=...` parameter on the insert/gather/fork helpers below accepts
+a `PageShard` and must only be used inside a `shard_map` over that axis;
+`shard=None` (the default) is the single-pool case and is unchanged.
+
 The dense `[L, B, max_seq, F]` cache remains the `layout=None` special
 case throughout `cache_specs` / `init_cache` / `decode_step`.
 """
@@ -35,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 
@@ -43,57 +71,137 @@ class PagedLayout:
     """Geometry of the paged KV pool.
 
     page_size : tokens per page (the policy's `kv_page_size` by default).
-    n_pages   : total pool pages, *including* the reserved trash page 0.
+    n_pages   : total pool pages across every shard, *including* the
+                per-shard reserved trash pages (local page 0 of each).
+    n_shards  : devices the page dimension is sharded over (the `kv_pages`
+                mesh axis).  1 = the single-pool case.
     """
 
     page_size: int
     n_pages: int
+    n_shards: int = 1
 
     def __post_init__(self):
-        if self.page_size <= 0 or self.n_pages < 2:
+        if self.page_size <= 0 or self.n_shards < 1:
             raise ValueError(f"bad paged layout {self}")
+        if self.n_pages % self.n_shards:
+            raise ValueError(
+                f"n_pages={self.n_pages} must divide evenly over "
+                f"n_shards={self.n_shards} (the kv_pages mesh axis)")
+        if self.pages_per_shard < 2:
+            raise ValueError(
+                f"each shard needs its trash page plus >=1 usable page; "
+                f"got {self.pages_per_shard} pages/shard in {self}")
+
+    @property
+    def pages_per_shard(self) -> int:
+        return self.n_pages // self.n_shards
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages: everything but the per-shard trash pages."""
+        return self.n_pages - self.n_shards
 
     def pages_per_slot(self, max_seq: int) -> int:
         """Block-table row length: pages addressing positions < max_seq."""
         return -(-max_seq // self.page_size)
 
+    # -- host-side global <-> (shard, local) id mapping -------------------
+
+    def _check(self, page: int):
+        if not 0 <= page < self.n_pages:
+            raise ValueError(
+                f"page id {page} out of range [0, {self.n_pages})")
+
+    def shard_of(self, page: int) -> int:
+        self._check(page)
+        return page // self.pages_per_shard
+
+    def local_id(self, page: int) -> int:
+        self._check(page)
+        return page % self.pages_per_shard
+
+    def global_id(self, shard: int, local: int) -> int:
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range [0, {self.n_shards})")
+        if not 0 <= local < self.pages_per_shard:
+            raise ValueError(
+                f"local id {local} out of range [0, {self.pages_per_shard})")
+        return shard * self.pages_per_shard + local
+
+    def is_trash(self, page: int) -> bool:
+        """Every shard's local page 0 is reserved (global 0 included)."""
+        self._check(page)
+        return page % self.pages_per_shard == 0
+
     @staticmethod
     def for_slots(batch: int, max_seq: int, page_size: int,
-                  n_pages: int | None = None) -> "PagedLayout":
+                  n_pages: int | None = None,
+                  n_shards: int = 1) -> "PagedLayout":
         """Default pool: full capacity for every slot plus the trash page
-        (capacity parity with the dense cache; smaller pools oversubscribe)."""
+        per shard (capacity parity with the dense cache; smaller pools
+        oversubscribe).  Sharded pools split the budget evenly: each of
+        the n_shards devices holds ceil(batch*pages_per_slot/n_shards)
+        usable pages plus its own trash page."""
         if page_size <= 0:
             raise ValueError(f"page_size must be positive, got {page_size}")
         per = -(-max_seq // page_size)
-        return PagedLayout(page_size,
-                           n_pages if n_pages is not None
-                           else batch * per + 1)
+        if n_pages is None:
+            n_pages = n_shards * (-(-(batch * per) // n_shards) + 1)
+        return PagedLayout(page_size, n_pages, n_shards)
 
 
-def insert_tokens(pages, block_table, lengths, vals):
+@dataclasses.dataclass(frozen=True)
+class PageShard:
+    """kv_pages shard context: which mesh axis the pool's page dimension
+    is split over.  Only meaningful inside a fully-manual `shard_map` that
+    binds `axis` — the helpers below call `jax.lax.axis_index(axis)` and
+    psum/pmax over it."""
+
+    axis: str
+    n_shards: int
+
+
+def localize_ids(ids, pages_per_shard: int, shard: PageShard):
+    """Global page ids -> (local ids, ownership mask) for this shard.
+
+    Non-owned ids localize to this shard's trash page 0 so they can be
+    used directly as scatter/gather indices; callers mask reads with the
+    returned `owned` mask (writes to local 0 are harmless by contract)."""
+    loc = ids - jax.lax.axis_index(shard.axis) * pages_per_shard
+    owned = (loc >= 0) & (loc < pages_per_shard)
+    return jnp.where(owned, loc, 0), owned
+
+
+def insert_tokens(pages, block_table, lengths, vals, shard: PageShard | None = None):
     """Write one decode token per slot into the page pool.
 
-    pages: [P, ps, F]; block_table: [B, M]; lengths: [B] (write position
-    per slot); vals: [B, F].  Rows whose block-table entries are zeroed
-    (free / mid-prefill slots) land on the trash page.
-    """
+    pages: [P, ps, F]; block_table: [B, M] (global ids); lengths: [B]
+    (write position per slot); vals: [B, F].  Rows whose block-table
+    entries are zeroed (free / mid-prefill slots) land on the trash page.
+    Under `shard`, pages is the local sub-pool and non-owned destinations
+    land on this shard's own trash page."""
     ps = pages.shape[1]
     B = vals.shape[0]
     page = block_table[jnp.arange(B), jnp.clip(lengths // ps, 0,
                                                block_table.shape[1] - 1)]
+    if shard is not None:
+        page, _ = localize_ids(page, pages.shape[0], shard)
     return pages.at[page, lengths % ps].set(vals.astype(pages.dtype))
 
 
-def insert_chunk(pages, bt_row, start, vals):
+def insert_chunk(pages, bt_row, start, vals, shard: PageShard | None = None):
     """Write a prefill chunk for one slot: vals [C, F] at positions
     start + [0, C) of the slot whose block-table row is bt_row [M]."""
     ps = pages.shape[1]
     pos = start + jnp.arange(vals.shape[0], dtype=jnp.int32)
     page = bt_row[jnp.clip(pos // ps, 0, bt_row.shape[0] - 1)]
+    if shard is not None:
+        page, _ = localize_ids(page, pages.shape[0], shard)
     return pages.at[page, pos % ps].set(vals.astype(pages.dtype))
 
 
-def insert_chunk_batched(pages, bt, starts, vals):
+def insert_chunk_batched(pages, bt, starts, vals, shard: PageShard | None = None):
     """Write one prefill chunk per slot in a single scatter: vals [B, C, F]
     at positions starts[b] + [0, C) of slot b.  Rows whose block-table
     entries are zeroed (inactive slots in a batched prefill call) land on
@@ -103,28 +211,55 @@ def insert_chunk_batched(pages, bt, starts, vals):
     pos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None]       # [B, C]
     page = jnp.take_along_axis(bt, jnp.clip(pos // ps, 0,
                                             bt.shape[1] - 1), axis=1)  # [B, C]
+    if shard is not None:
+        page, _ = localize_ids(page, pages.shape[0], shard)
     return pages.at[page, pos % ps].set(vals.astype(pages.dtype))
 
 
-def gather_slot(pages, bt_row):
+def gather_slot(pages, bt_row, shard: PageShard | None = None):
     """Materialize one slot's pages densely: [M*ps, F].  Entries beyond
-    the slot's written prefix are garbage — callers mask by position."""
+    the slot's written prefix are garbage — callers mask by position.
+    Under `shard`, each device contributes the pages it owns (zeros
+    elsewhere) and a psum over the shard axis rebuilds the exact global
+    gather — a sequence-parallel all-gather that ships posit codes, not
+    decoded floats."""
     M = bt_row.shape[0]
     ps, F = pages.shape[1], pages.shape[2]
-    return pages[bt_row].reshape(M * ps, F)
+    if shard is None:
+        return pages[bt_row].reshape(M * ps, F)
+    loc, owned = localize_ids(bt_row, pages.shape[0], shard)
+    rows = jnp.where(owned[:, None, None], pages[loc],
+                     jnp.zeros((), pages.dtype))
+    return jax.lax.psum(rows, shard.axis).reshape(M * ps, F)
 
 
-def gather_slots(pages, bt):
+def gather_slots(pages, bt, shard: PageShard | None = None):
     """Materialize every slot's pages densely: [B, M*ps, F] (the batched
     `gather_slot`).  Zeroed block-table rows gather the trash page —
     garbage, masked by position like any unwritten suffix."""
     B, M = bt.shape
     ps, F = pages.shape[1], pages.shape[2]
-    return pages[bt].reshape(B, M * ps, F)
+    if shard is None:
+        return pages[bt].reshape(B, M * ps, F)
+    loc, owned = localize_ids(bt, pages.shape[0], shard)
+    rows = jnp.where(owned[..., None, None], pages[loc],
+                     jnp.zeros((), pages.dtype))
+    return jax.lax.psum(rows, shard.axis).reshape(B, M * ps, F)
 
 
-def fork_page(pool, dst, src):
+def fork_page(pool, dst, src, shard: PageShard | None = None):
     """Copy-on-write fork: duplicate page `src` into page `dst` across the
     leading (layer/stack) dim.  pool: [L, P, ps, F]; dst/src are traced
-    scalars so one compile covers every fork."""
-    return pool.at[:, dst].set(pool[:, src])
+    scalars so one compile covers every fork.  Under `shard`, src/dst are
+    global ids possibly on different devices: the owner of `src`
+    broadcasts the page (psum of a single non-zero contribution) and the
+    owner of `dst` writes it; everyone else is a no-op."""
+    if shard is None:
+        return pool.at[:, dst].set(pool[:, src])
+    pps = pool.shape[1]
+    lsrc, own_src = localize_ids(src, pps, shard)
+    row = jnp.where(own_src, pool[:, lsrc], jnp.zeros((), pool.dtype))
+    row = jax.lax.psum(row, shard.axis)
+    ldst, own_dst = localize_ids(dst, pps, shard)
+    keep = pool[:, ldst]
+    return pool.at[:, ldst].set(jnp.where(own_dst, row, keep))

@@ -230,10 +230,16 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: Optional[int] = None):
     return logits, cache
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig):
-    """One autoregressive step. tokens: [B] int32. Returns (logits, cache')."""
+def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
+    """One autoregressive step. tokens: [B] int32. Returns (logits, cache').
+
+    shard: optional paged.PageShard — the paged KV pool is kv_pages-sharded
+    and this call runs inside a shard_map over that axis (block tables hold
+    global page ids; see models/paged.py)."""
     if "block_table" in cache:
-        return _decode_step_paged(params, tokens, cache, cfg)
+        return _decode_step_paged(params, tokens, cache, cfg, shard=shard)
+    if shard is not None:
+        raise ValueError("kv_pages sharding requires a paged cache")
     B = tokens.shape[0]
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
     S_max = cache["k"].shape[2]
@@ -306,7 +312,8 @@ def _window_arr(cfg: ModelConfig, is_global):
                      jnp.int32(cfg.sliding_window)).reshape(1)
 
 
-def _paged_attn_token(p, x, cfg: ModelConfig, k_l, v_l, bt, length, is_global):
+def _paged_attn_token(p, x, cfg: ModelConfig, k_l, v_l, bt, length, is_global,
+                      shard=None):
     """One-token attention sub-block over paged KV (decode hot path).
 
     x: [B, 1, D]; k_l/v_l: [n_pages, ps, Hkv*Dh] page pools; bt: [B, M];
@@ -314,6 +321,12 @@ def _paged_attn_token(p, x, cfg: ModelConfig, k_l, v_l, bt, length, is_global):
     at position `length`, then runs the Pallas paged-attention kernel
     (block-table gather + in-kernel posit decode).  Returns
     (post-wo output [B, 1, D], k_pool', v_pool').
+
+    Under a kv_pages shard each device runs the kernel over only the pages
+    it owns (block table localized, non-owned pages masked via page_ok,
+    partials=True) and the per-shard streaming-softmax states are log-sum-
+    exp merged — sequence-parallel paged attention, bitwise identical to
+    the single pool whenever a slot's pages live on one shard.
     """
     B = x.shape[0]
     Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -328,20 +341,31 @@ def _paged_attn_token(p, x, cfg: ModelConfig, k_l, v_l, bt, length, is_global):
     q = common.rope(q, q_pos, cfg.rope_theta)
     k = common.rope(k, q_pos, cfg.rope_theta)
     k_new = paged.insert_tokens(k_l, bt, length,
-                                common.kv_encode(cfg, k.reshape(B, -1)))
+                                common.kv_encode(cfg, k.reshape(B, -1)),
+                                shard=shard)
     v_new = paged.insert_tokens(v_l, bt, length,
-                                common.kv_encode(cfg, v.reshape(B, -1)))
-    attn = ops.paged_attention(
-        q.reshape(B, Hq, Dh), k_new, v_new, bt, length + 1,
-        _window_arr(cfg, is_global), fmt_kv=cfg.quant.kv_cache,
-        softcap_val=cfg.logit_softcap)
+                                common.kv_encode(cfg, v.reshape(B, -1)),
+                                shard=shard)
+    if shard is None:
+        attn = ops.paged_attention(
+            q.reshape(B, Hq, Dh), k_new, v_new, bt, length + 1,
+            _window_arr(cfg, is_global), fmt_kv=cfg.quant.kv_cache,
+            softcap_val=cfg.logit_softcap)
+    else:
+        lbt, owned = paged.localize_ids(bt, k_l.shape[0], shard)
+        o, m, l = ops.paged_attention(
+            q.reshape(B, Hq, Dh), k_new, v_new, lbt, length + 1,
+            _window_arr(cfg, is_global), fmt_kv=cfg.quant.kv_cache,
+            softcap_val=cfg.logit_softcap,
+            page_ok=owned.astype(jnp.int32), partials=True)
+        attn = ops.merge_attn_partials(o, m, l, shard.axis)
     out = common.qdot(attn.reshape(B, 1, Hq * Dh).astype(x.dtype),
                       p["wo"], cfg.quant)
     return out, k_new, v_new
 
 
 def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
-                bt_row=None, slot=None, is_global=None):
+                bt_row=None, slot=None, is_global=None, shard=None):
     """Prefill-chunk attention for one slot: queries at positions
     start + [0, C) attend the slot's cached history plus themselves.
 
@@ -369,10 +393,12 @@ def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
     k_codes = common.kv_encode(cfg, k.reshape(C, -1))
     v_codes = common.kv_encode(cfg, v.reshape(C, -1))
     if bt_row is not None:
-        hist_k, hist_v = (paged.gather_slot(k_l, bt_row),
-                          paged.gather_slot(v_l, bt_row))
-        k_new = paged.insert_chunk(k_l, bt_row, start, k_codes)
-        v_new = paged.insert_chunk(v_l, bt_row, start, v_codes)
+        # under a kv_pages shard the gather is a psum over owned pages —
+        # exact, so chunked prefill stays bit-identical to the single pool
+        hist_k, hist_v = (paged.gather_slot(k_l, bt_row, shard=shard),
+                          paged.gather_slot(v_l, bt_row, shard=shard))
+        k_new = paged.insert_chunk(k_l, bt_row, start, k_codes, shard=shard)
+        v_new = paged.insert_chunk(v_l, bt_row, start, v_codes, shard=shard)
     else:
         hist_k, hist_v = k_l[slot], v_l[slot]
         k_new = k_l.at[slot, pos].set(k_codes.astype(k_l.dtype))
@@ -399,7 +425,7 @@ def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
 
 
 def _chunk_attn_batched(p, x, cfg: ModelConfig, k_l, v_l, starts, *,
-                        bt=None, is_global=None):
+                        bt=None, is_global=None, shard=None):
     """Cross-slot batched prefill-chunk attention: queries of slot b sit at
     positions starts[b] + [0, C) and attend that slot's cached history plus
     themselves.  x: [B, C, D]; starts: [B] (0 for inactive rows).  Paged
@@ -425,10 +451,12 @@ def _chunk_attn_batched(p, x, cfg: ModelConfig, k_l, v_l, starts, *,
     k_codes = common.kv_encode(cfg, k.reshape(B, C, -1))
     v_codes = common.kv_encode(cfg, v.reshape(B, C, -1))
     if bt is not None:
-        hist_k, hist_v = (paged.gather_slots(k_l, bt),
-                          paged.gather_slots(v_l, bt))
-        k_new = paged.insert_chunk_batched(k_l, bt, starts, k_codes)
-        v_new = paged.insert_chunk_batched(v_l, bt, starts, v_codes)
+        hist_k, hist_v = (paged.gather_slots(k_l, bt, shard=shard),
+                          paged.gather_slots(v_l, bt, shard=shard))
+        k_new = paged.insert_chunk_batched(k_l, bt, starts, k_codes,
+                                           shard=shard)
+        v_new = paged.insert_chunk_batched(v_l, bt, starts, v_codes,
+                                           shard=shard)
     else:
         rows = jnp.arange(B, dtype=jnp.int32)[:, None]
         hist_k, hist_v = k_l, v_l
@@ -456,7 +484,7 @@ def _chunk_attn_batched(p, x, cfg: ModelConfig, k_l, v_l, starts, *,
     return out, k_new, v_new
 
 
-def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
+def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None):
     """decode_step over the paged cache: per layer, scatter the token's KV
     codes into the slot's current page and attend via the paged-attention
     kernel — decode memory traffic scales with tokens in flight."""
@@ -469,7 +497,7 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
     def body(x, xs):
         p, is_global, k_l, v_l = xs
         attn, k_new, v_new = _paged_attn_token(p, x, cfg, k_l, v_l, bt,
-                                               length, is_global)
+                                               length, is_global, shard=shard)
         x = x + attn
         x = x + _mlp_block(p, x, cfg)
         return x, (k_new, v_new)
@@ -484,7 +512,7 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig):
                           "length": length + 1}
 
 
-def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
+def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):
     """Chunked prefill: process prompt chunk `tokens` [1, C] for one slot.
 
     The chunk lands at positions length[slot] + [0, C); works on both the
@@ -505,7 +533,8 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
         p, is_global, k_l, v_l = xs
         attn, k_new, v_new = _chunk_attn(
             p, x, cfg, k_l, v_l, start, bt_row=bt_row,
-            slot=None if bt_row is not None else slot, is_global=is_global)
+            slot=None if bt_row is not None else slot, is_global=is_global,
+            shard=shard)
         x = x + attn
         x = x + _mlp_block(p, x, cfg)
         return x, (k_new, v_new)
@@ -522,7 +551,8 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig):
     return logits, new_cache
 
 
-def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
+def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig,
+                          shard=None):
     """Cross-slot batched chunked prefill: one [B, C] program advances every
     active slot by a chunk of the same bucket size — the serving engine
     compiles one prefill program per bucket and issues one device call per
@@ -542,7 +572,8 @@ def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig):
     def body(x, xs):
         p, is_global, k_l, v_l = xs
         attn, k_new, v_new = _chunk_attn_batched(
-            p, x, cfg, k_l, v_l, starts, bt=bt, is_global=is_global)
+            p, x, cfg, k_l, v_l, starts, bt=bt, is_global=is_global,
+            shard=shard)
         x = x + attn
         x = x + _mlp_block(p, x, cfg)
         return x, (k_new, v_new)

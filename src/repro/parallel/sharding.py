@@ -111,6 +111,46 @@ def sharding_for(shape, logical_axes, mesh, rules=ShardingRules()) -> NamedShard
     return NamedSharding(mesh, spec_for(shape, logical_axes, mesh, rules))
 
 
+def mesh_axes_for(logical: str, mesh: Mesh,
+                  rules: ShardingRules = ShardingRules()) -> tuple:
+    """Physical mesh axes the rule table maps `logical` onto, restricted to
+    axes actually present in this mesh (absent axes — e.g. 'model' on a
+    data-only mesh — are dropped, the same fallback `spec_for` applies)."""
+    phys = rules.as_dict().get(logical)
+    if phys is None:
+        return ()
+    phys_t = phys if isinstance(phys, (tuple, list)) else (phys,)
+    return tuple(a for a in phys_t if a in mesh.shape)
+
+
+def mesh_axis_size(logical: str, mesh: Mesh,
+                   rules: ShardingRules = ShardingRules()) -> int:
+    """Total device count a `logical` axis shards over on this mesh (1 when
+    its physical axes are absent — the replicate fallback)."""
+    out = 1
+    for a in mesh_axes_for(logical, mesh, rules):
+        out *= mesh.shape[a]
+    return out
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Fully-manual shard_map, tolerant of the jax API move.
+
+    New jax exposes `jax.shard_map(axis_names=..., check_vma=...)`; older
+    releases only have `jax.experimental.shard_map.shard_map`.  We always
+    go fully manual (every mesh axis): partial-manual (`auto=...`) trips
+    XLA partitioner check-failures on older jaxlibs.  Used by the
+    compressed train step (train/step.py) and the sharded serving engine
+    (serve/engine.py)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, axis_names=set(mesh.axis_names),
+                  in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def constrain(x, logical_axes, mesh: Optional[Mesh] = None,
               rules: ShardingRules = ShardingRules()):
     """with_sharding_constraint by logical axes; no-op without a mesh.

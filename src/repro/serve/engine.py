@@ -39,6 +39,14 @@ one physical page may appear in many block tables:
     promised to admitted requests are accounted up front rather than per
     request in isolation.
 
+**Sharded pools** (`mesh=...`): on a mesh with a >1 kv_pages axis the
+pool's page dimension splits into contiguous per-device ranges with one
+page budget per device; block tables keep *global* page ids (the id
+contract lives in models/paged.py), every entry point runs under a
+fully-manual shard_map, and decode log-sum-exp-merges per-device
+streaming-softmax partials exactly — a multi-device engine is
+token-identical to the 1-device engine over the same pool.
+
 Pages reclaim at retirement (refcount--, recycled at zero, prefix-index
 entries evicted) and are reused without zeroing: every position is written
 before any attention may read it, so stale keys cannot leak.  The decode
@@ -73,7 +81,8 @@ import numpy as np
 
 from repro.models import api
 from repro.models.config import ModelConfig
-from repro.models.paged import PagedLayout, fork_page
+from repro.models.paged import PagedLayout, PageShard, fork_page
+from repro.parallel import sharding
 
 
 @dataclasses.dataclass
@@ -87,37 +96,94 @@ class Request:
 
 
 class PageAllocator:
-    """Host-side refcounted free-list over the KV page pool.
+    """Host-side refcounted free-list over the (possibly sharded) KV pool.
 
-    Page 0 is reserved as the trash page (zeroed block-table rows direct
-    stray writes/gathers there) and is never handed out.  `alloc` grants
-    fresh pages at refcount 1; `share` maps an already-live page into
-    another block table (refcount++); `free` drops one reference per page
-    and recycles a page onto the free list only when its last reference
-    goes — freeing a page that holds no reference raises (double-free)."""
+    Block tables address *global* page ids throughout (models/paged.py).
+    With n_shards=1 this is the single-pool allocator: page 0 is the trash
+    page and is never handed out.  With n_shards>1 the pool's page dim is
+    split over the kv_pages mesh axis into contiguous per-shard ranges and
+    the allocator keeps one free list — one *page budget* — per device:
+    every shard's local page 0 (global ids ≡ 0 mod pages_per_shard) is that
+    shard's trash page, so capacity is n_pages - n_shards.
 
-    def __init__(self, n_pages: int):
-        self.capacity = n_pages - 1
+    `alloc(n, prefer_shard=...)` grants fresh pages at refcount 1, with
+    *slot affinity*: all n pages come from one shard when any single shard
+    can serve them (prefer_shard first — a prefix donor's shard, so shared
+    chains stay device-local — else the least-loaded shard), and spill
+    deterministically across shards (most-free first, ties by shard index)
+    only when no single budget fits.  Cross-shard slots stay correct via
+    the log-sum-exp partial merge; single-shard slots decode bitwise
+    identically to an unsharded pool.
+
+    `share` maps an already-live page into another block table
+    (refcount++); `free` drops one reference per page and recycles a page
+    onto its own shard's free list only when its last reference goes —
+    freeing a page that holds no reference raises (double-free)."""
+
+    def __init__(self, n_pages: int, n_shards: int = 1):
+        if n_pages % n_shards:
+            raise ValueError(f"n_pages={n_pages} not divisible by "
+                             f"n_shards={n_shards}")
+        self.n_shards = n_shards
+        self.pages_per_shard = n_pages // n_shards
+        if self.pages_per_shard < 2:
+            raise ValueError(f"need >= 2 pages per shard (trash + 1), got "
+                             f"{self.pages_per_shard}")
+        self.capacity = n_pages - n_shards
         self.peak_in_use = 0
         self.total_allocs = 0   # fresh grants ever (shares not counted)
-        self._free = list(range(n_pages - 1, 0, -1))  # pop() -> low ids first
+        # per-shard free lists of global ids; pop() -> low local ids first;
+        # local page 0 of every shard is its trash page, never listed
+        self._free = [list(range((s + 1) * self.pages_per_shard - 1,
+                                 s * self.pages_per_shard, -1))
+                      for s in range(n_shards)]
         self._refs: Dict[int, int] = {}
 
     @property
     def pages_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
 
     @property
     def pages_in_use(self) -> int:
-        return self.capacity - len(self._free)
+        return self.capacity - self.pages_free
+
+    @property
+    def pages_free_by_shard(self) -> List[int]:
+        return [len(f) for f in self._free]
+
+    @property
+    def pages_in_use_by_shard(self) -> List[int]:
+        per = self.pages_per_shard - 1  # usable pages per device
+        return [per - len(f) for f in self._free]
+
+    def shard_of(self, page: int) -> int:
+        return page // self.pages_per_shard
 
     def refcount(self, page: int) -> int:
         return self._refs.get(page, 0)
 
-    def alloc(self, n: int) -> Optional[List[int]]:
-        if n > len(self._free):
+    def alloc(self, n: int,
+              prefer_shard: Optional[int] = None) -> Optional[List[int]]:
+        if n > self.pages_free:
             return None
-        out = [self._free.pop() for _ in range(n)]
+        if n == 0:
+            return []
+        if prefer_shard is not None and len(self._free[prefer_shard]) >= n:
+            order = [prefer_shard]
+        else:
+            fits = [s for s in range(self.n_shards)
+                    if len(self._free[s]) >= n]
+            if fits:
+                # single-shard fit: least-loaded (most free), ties by index
+                order = [max(fits, key=lambda s: (len(self._free[s]), -s))]
+            else:
+                # deterministic spill: most-free first, ties by index
+                order = sorted(range(self.n_shards),
+                               key=lambda s: (-len(self._free[s]), s))
+        out: List[int] = []
+        for s in order:
+            while len(out) < n and self._free[s]:
+                out.append(self._free[s].pop())
         for p in out:
             self._refs[p] = 1
         self.total_allocs += len(out)
@@ -141,7 +207,7 @@ class PageAllocator:
                 raise ValueError(f"double free of page {p}")
             if rc == 1:
                 del self._refs[p]
-                self._free.append(p)
+                self._free[self.shard_of(p)].append(p)
                 recycled.append(p)
             else:
                 self._refs[p] = rc - 1
@@ -177,18 +243,33 @@ class ServingEngine:
                  prefill_buckets=(64, 16, 4, 1),
                  prefill_chunks_per_step: int = 0,
                  prefix_sharing: Optional[bool] = None,
-                 batched_prefill: Optional[bool] = None):
+                 batched_prefill: Optional[bool] = None,
+                 mesh=None):
         """batch_slots decode slots over a max_seq position budget per slot.
 
         paged=True (default) serves attention families from a posit-coded
         page pool; page_size defaults to cfg.quant.kv_page_size and n_pages
-        to full capacity (batch_slots * pages_per_slot + trash page) —
+        to full capacity (batch_slots * pages_per_slot + trash pages) —
         pass a smaller n_pages to oversubscribe (admission then waits for
         reclaimed pages).  prefill_chunks_per_step=0 completes a prompt's
         chunks at admission; k>0 interleaves at most k chunks per request
         per engine step with ongoing decode (chunked prefill inside the
         decode loop).  prefix_sharing / batched_prefill default to the
         QuantPolicy knobs (both on); sharing applies to paged engines only.
+
+        mesh: optional jax Mesh.  When the mesh has a >1-sized axis that the
+        sharding rules map `kv_pages` onto (the 'model' axis by default),
+        the page pool's page dimension is sharded over it: each device owns
+        a contiguous global-page-id range and one per-device page budget
+        (see PageAllocator), n_pages must divide by the shard count, and
+        every entry point runs under a fully-manual shard_map — paged
+        attention merges per-device softmax partials exactly, so tokens are
+        identical to a 1-device engine over the same pool.  All other state
+        (weights, metadata, SSM/conv rows) stays replicated; extra >1 mesh
+        axes are rejected.  The host scheduler is unchanged: block tables
+        keep global page ids, and allocation prefers single-shard slots
+        (prefix donors' shards for shared chains) before spilling.
+        Dense-cache and SSM-family engines ignore the mesh.
         """
         self.cfg = cfg
         self.params = params
@@ -198,16 +279,42 @@ class ServingEngine:
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self.prefill_chunks_per_step = int(prefill_chunks_per_step)
+        self.mesh = None
+        self._shard_axis = None
+        n_shards = 1
+        if mesh is not None and paged:
+            axes = [a for a in sharding.mesh_axes_for("kv_pages", mesh)
+                    if mesh.shape[a] > 1]
+            extra = [a for a in mesh.axis_names
+                     if mesh.shape[a] > 1 and a not in axes]
+            if extra:
+                raise ValueError(
+                    f"serving mesh has >1-sized axes {extra} that kv_pages "
+                    f"does not shard over; the engine only shards the page "
+                    f"pool — use a mesh whose non-trivial axis is the "
+                    f"kv_pages one (default: 'model')")
+            if len(axes) > 1:
+                raise ValueError(
+                    f"kv_pages maps onto multiple >1 mesh axes {axes}; "
+                    f"shard the page pool over a single axis")
+            if axes:
+                self.mesh = mesh
+                self._shard_axis = axes[0]
+                n_shards = mesh.shape[axes[0]]
         self.layout = None
         if paged:
             ps = cfg.quant.kv_page_size if page_size is None else page_size
             self.layout = PagedLayout.for_slots(batch_slots, max_seq, ps,
-                                                n_pages)
+                                                n_pages, n_shards=n_shards)
         self.cache = api.init_cache(cfg, batch_slots, max_seq, self.layout)
         self.paged = "block_table" in self.cache  # SSM families: no pages
         if not self.paged:
             self.layout = None
-        self.allocator = (PageAllocator(self.layout.n_pages)
+            self.mesh = None      # SSM recurrent state is O(1): nothing to
+            self._shard_axis = None  # shard; serve replicated
+        self.n_shards = self.layout.n_shards if self.paged else 1
+        self.allocator = (PageAllocator(self.layout.n_pages,
+                                        self.layout.n_shards)
                           if self.paged else None)
         self.max_pages_per_slot = (self.cache["block_table"].shape[1]
                                    if self.paged else 0)
@@ -228,15 +335,20 @@ class ServingEngine:
             self.batched_prefill = bool(batched_prefill)
 
         self.prefill_buckets = self._valid_buckets(prefill_buckets)
-        self._decode = jax.jit(
-            lambda p, t, c: api.decode_step(p, t, c, cfg))
-        self._chunk = jax.jit(
-            lambda p, t, c, s: api.prefill_chunk(p, t, c, s, cfg))
-        self._chunk_batched = jax.jit(
-            lambda p, t, c, a: api.prefill_chunk_batched(p, t, c, a, cfg))
-        # COW page duplication; dst/src are traced so one compile covers
-        # every fork
-        self._fork_fn = jax.jit(fork_page)
+        if self.n_shards > 1:
+            self._install_sharded_fns()
+        else:
+            self._page_shard = None
+            self._decode = jax.jit(
+                lambda p, t, c: api.decode_step(p, t, c, cfg))
+            self._chunk = jax.jit(
+                lambda p, t, c, s: api.prefill_chunk(p, t, c, s, cfg))
+            self._chunk_batched = jax.jit(
+                lambda p, t, c, a: api.prefill_chunk_batched(p, t, c, a,
+                                                             cfg))
+            # COW page duplication; dst/src are traced so one compile
+            # covers every fork
+            self._fork_fn = jax.jit(fork_page)
         # whole-prompt prefill, kept as a reference/debug probe only — the
         # serving path never calls it (chunked prefill replaces it)
         self._prefill = jax.jit(
@@ -295,6 +407,52 @@ class ServingEngine:
             q = self.cfg.ssm_chunk
             out = {b for b in out if b <= q or b % q == 0}
         return tuple(sorted(out, reverse=True))
+
+    def _install_sharded_fns(self):
+        """Wrap the serving entry points in a fully-manual shard_map over
+        the kv_pages mesh axis.  Only the page pools' page dim is sharded
+        (each device holds its contiguous global-id range, re-indexed
+        locally by models/paged.py); params, metadata, and any recurrent
+        conv/SSM state stay replicated.  PartitionSpecs are built from the
+        cache leaves' logical axes directly rather than through the global
+        rule table: on a serving mesh the kv_pages axis must not drag
+        heads/experts/SSM channels along with it (the table maps those onto
+        'model' too, for training-time tensor parallelism)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        cfg = self.cfg
+        ax = self._shard_axis
+        sctx = PageShard(axis=ax, n_shards=self.n_shards)
+        self._page_shard = sctx
+        specs = api.cache_specs(cfg, self.B, self.S, self.layout)
+        cspec = {name: P(*[ax if la == "kv_pages" else None
+                           for la in s.logical_axes])
+                 for name, s in specs.items()}
+        rep = P()
+        prep = jax.tree.map(lambda _: rep, self.params)
+        sm, mesh = sharding.shard_map, self.mesh
+        self._decode = jax.jit(sm(
+            lambda p, t, c: api.decode_step(p, t, c, cfg, shard=sctx),
+            mesh, in_specs=(prep, rep, cspec), out_specs=(rep, cspec)))
+        self._chunk = jax.jit(sm(
+            lambda p, t, c, s: api.prefill_chunk(p, t, c, s, cfg,
+                                                 shard=sctx),
+            mesh, in_specs=(prep, rep, cspec, rep),
+            out_specs=(rep, cspec)))
+        self._chunk_batched = jax.jit(sm(
+            lambda p, t, c, a: api.prefill_chunk_batched(p, t, c, a, cfg,
+                                                         shard=sctx),
+            mesh, in_specs=(prep, rep, cspec, rep),
+            out_specs=(rep, cspec)))
+        pool = cspec["k"]
+        self._fork_fn = jax.jit(sm(
+            lambda kv, d, s: fork_page(kv, d, s, shard=sctx),
+            mesh, in_specs=(pool, rep, rep), out_specs=pool))
+        # place the freshly-zeroed cache on the mesh up front so the first
+        # entry-point call doesn't implicitly reshard host-resident arrays
+        self.cache = {
+            name: jax.device_put(leaf, NamedSharding(mesh, cspec[name]))
+            for name, leaf in self.cache.items()}
 
     # ------------------------------------------------------------------
     @classmethod
@@ -365,6 +523,9 @@ class ServingEngine:
                 // self.layout.n_pages
             out["kv_bytes_in_use"] = self.pages_in_use * page_b
             out["kv_bytes_peak"] = self.allocator.peak_in_use * page_b
+            if self.n_shards > 1:
+                out["pages_in_use_by_shard"] = \
+                    self.allocator.pages_in_use_by_shard
         return out
 
     def kv_cache_bytes(self) -> int:
@@ -424,8 +585,11 @@ class ServingEngine:
             "metadata_bytes": kv["metadata_bytes"],
             "paged": self.paged,
             "page_size": self.layout.page_size if self.paged else None,
+            "kv_shards": self.n_shards,
             "pages_in_use": self.pages_in_use,
             "pages_free": self.pages_free,
+            "pages_in_use_by_shard": (self.allocator.pages_in_use_by_shard
+                                      if self.paged else None),
             "prefix_sharing": self.prefix_sharing,
             "batched_prefill": self.batched_prefill,
             "pages_shared_mapped": self.pages_shared_mapped,
@@ -453,10 +617,13 @@ class ServingEngine:
                 f"({req.max_new_tokens}) needs {n + req.max_new_tokens - 1} "
                 f"positions but max_seq is {self.S}")
         if self.paged and self._pages_needed(req) > self.allocator.capacity:
+            budgets = ("" if self.allocator.n_shards == 1 else
+                       f" ({self.allocator.n_shards} per-device budgets of "
+                       f"{self.allocator.pages_per_shard - 1} pages)")
             raise ValueError(
                 f"request {req.rid} needs {self._pages_needed(req)} pages "
-                f"but the pool only has {self.allocator.capacity}; raise "
-                f"n_pages or shorten prompt/max_new_tokens")
+                f"but the pool only has {self.allocator.capacity}{budgets}; "
+                f"raise n_pages or shorten prompt/max_new_tokens")
         req.out_tokens = []
         self.queue.append(req)
 
@@ -746,7 +913,10 @@ class ServingEngine:
         dst = self.slot_reserve[slot]
         self.slot_reserve[slot] = None
         if dst is None:
-            got = self.allocator.alloc(1)
+            # fork copies run device-local when the source's shard has a
+            # free page (fork_page broadcasts across shards otherwise)
+            got = self.allocator.alloc(
+                1, prefer_shard=self.allocator.shard_of(src))
             if got is None:
                 raise RuntimeError(
                     f"page pool exhausted during copy-on-write fork for "
@@ -834,7 +1004,12 @@ class ServingEngine:
                 # here just waits for another request's pages to reclaim
                 shared, n_shared, state, partial = self._lookup_prefix(req)
                 k_full = len(shared) - (1 if partial else 0)
-                pages = self.allocator.alloc(self._pages_needed(req) - k_full)
+                # shard affinity: extend a shared chain on its donor's
+                # shard so the whole slot stays device-local when it fits
+                prefer = (self.allocator.shard_of(shared[0])
+                          if shared else None)
+                pages = self.allocator.alloc(self._pages_needed(req) - k_full,
+                                             prefer_shard=prefer)
                 if pages is None and self._held \
                         and not (self.slot_phase != _FREE).any():
                     # nothing in flight will ever reclaim: held prefix
@@ -844,8 +1019,11 @@ class ServingEngine:
                     shared, n_shared, state, partial = \
                         self._lookup_prefix(req)
                     k_full = len(shared) - (1 if partial else 0)
+                    prefer = (self.allocator.shard_of(shared[0])
+                              if shared else None)
                     pages = self.allocator.alloc(
-                        self._pages_needed(req) - k_full)
+                        self._pages_needed(req) - k_full,
+                        prefer_shard=prefer)
                 if pages is None:
                     return admitted  # wait for reclamation
                 self.allocator.share(shared)

@@ -26,20 +26,8 @@ from repro.optim.optimizers import Optimizer
 from repro.parallel import sharding
 
 
-def _shard_map(f, mesh, in_specs, out_specs):
-    """Fully-manual shard_map, tolerant of the jax API move.
-
-    New jax exposes `jax.shard_map(axis_names=..., check_vma=...)`; older
-    releases only have `jax.experimental.shard_map.shard_map`.  We always
-    go fully manual (every mesh axis): partial-manual (`auto=...`) trips
-    XLA partitioner check-failures on older jaxlibs."""
-    sm = getattr(jax, "shard_map", None)
-    if sm is not None:
-        return sm(f, mesh=mesh, axis_names=set(mesh.axis_names),
-                  in_specs=in_specs, out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as sm
-    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-              check_rep=False)
+# compat shim now lives in parallel/sharding.py (also used by serving)
+_shard_map = sharding.shard_map
 
 
 class TrainState(NamedTuple):

@@ -13,6 +13,13 @@ than example-driven point checks:
     eos-at-prefill, single-token budgets, oversubscribed pools) decode
     token-identical to the dense reference engine, and every page, hold,
     and prefix-index entry reclaims once the queue drains.
+  * Sharded pool (kv_pages over a 2-device mesh): the same allocator laws
+    per-device — budgets conserve shard-wise, no shard's trash page is
+    ever granted, prefer_shard affinity holds whenever the budget fits —
+    and the same scheduler law: random queues on the mesh engine decode
+    token-identical to the dense reference with zero page leaks on any
+    shard.  The mesh runs need >= 2 devices and skip otherwise (the CI
+    8-device leg forces them via XLA_FLAGS).
 
 Runs under the fixed-seed `ci` hypothesis profile in CI (tests/conftest.py)
 so a red run replays locally byte for byte.
@@ -97,6 +104,58 @@ def test_allocator_rejects_double_free_and_free_share(n_pages):
         a.share([got[0]])
 
 
+@given(pps=st.integers(2, 8), n_shards=st.integers(1, 4), data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_sharded_allocator_invariants_under_random_ops(pps, n_shards, data):
+    """The per-device budgets obey the single-pool laws shard-wise: no
+    shard's trash page (global ids = 0 mod pages_per_shard) is ever
+    granted, per-shard in_use + free == pages_per_shard - 1, frees recycle
+    onto their own shard, and prefer_shard is honored whenever that
+    budget fits the whole grant."""
+    a = PageAllocator(pps * n_shards, n_shards=n_shards)
+    live = {}
+    for _ in range(data.draw(st.integers(1, 40))):
+        op = data.draw(st.sampled_from(["alloc", "share", "free"]))
+        if op == "alloc":
+            n = data.draw(st.integers(0, pps * n_shards))
+            prefer = data.draw(st.one_of(
+                st.none(), st.integers(0, n_shards - 1)))
+            free_at_prefer = (a.pages_free_by_shard[prefer]
+                              if prefer is not None else -1)
+            got = a.alloc(n, prefer_shard=prefer)
+            if n > a.capacity - len(live):
+                assert got is None, "oversubscribing alloc must refuse"
+            if got is None:
+                continue
+            assert len(got) == n == len(set(got))
+            assert all(g % pps != 0 for g in got), "granted a trash page"
+            assert not (set(got) & set(live)), "granted a live page twice"
+            if prefer is not None and free_at_prefer >= n > 0:
+                assert all(g // pps == prefer for g in got), \
+                    "prefer_shard budget fit but grant left the shard"
+            for p in got:
+                live[p] = 1
+        elif op == "share" and live:
+            p = data.draw(st.sampled_from(sorted(live)))
+            a.share([p])
+            live[p] += 1
+        elif op == "free" and live:
+            p = data.draw(st.sampled_from(sorted(live)))
+            recycled = a.free([p])
+            live[p] -= 1
+            if live[p] == 0:
+                del live[p]
+                assert recycled == [p]
+        by_use = a.pages_in_use_by_shard
+        by_free = a.pages_free_by_shard
+        for s in range(n_shards):
+            assert by_use[s] + by_free[s] == pps - 1
+            assert by_use[s] == sum(1 for p in live if p // pps == s)
+    for p, rc in list(live.items()):
+        assert a.free([p] * rc) == [p]
+    assert a.pages_free_by_shard == [pps - 1] * n_shards
+
+
 # ---------------------------------------------------------------------------
 # scheduler fuzz: random queues vs the dense reference engine
 # ---------------------------------------------------------------------------
@@ -174,4 +233,44 @@ def test_scheduler_fuzz_matches_dense_reference(q):
         == paged.allocator.capacity
     assert not paged.prefix_index and not paged._held
     assert not paged.allocator._refs
+    assert all(not p for p in paged.slot_pages)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="sharded-pool fuzz needs >=2 devices (the CI "
+                           "8-device leg forces them via XLA_FLAGS)")
+@given(q=_queues())
+@settings(max_examples=6, deadline=None)
+def test_sharded_scheduler_fuzz_matches_dense_reference(q):
+    """The 2-device mesh engine obeys the same law as the single-pool
+    one: any random queue decodes token-identical to the dense reference,
+    and once it drains every per-device page budget is back to full — no
+    leaked pages, holds, or index entries on either shard."""
+    from repro.launch.mesh import make_serving_mesh
+
+    reqs, slack, chunks_per_step = q
+    cfg, params = _model()
+    max_need = max((len(r["prompt"]) + r["max_new_tokens"] - 2) // _PS + 1
+                   for r in reqs)
+    # smallest even pool with capacity (n_pages - 2 trash) >= max_need,
+    # plus slack — queues routinely oversubscribe and spill across shards
+    n_pages = max_need + 2 + slack
+    n_pages += n_pages % 2
+    kw = dict(batch_slots=2, max_seq=32, prefill_buckets=(4, 1),
+              prefill_chunks_per_step=chunks_per_step)
+    paged = ServingEngine(cfg, params, page_size=_PS, n_pages=n_pages,
+                          mesh=make_serving_mesh(2), **kw)
+    dense = ServingEngine(cfg, params, paged=False, **kw)
+    assert paged.n_shards == 2
+    for eng in (paged, dense):
+        for r in reqs:
+            eng.submit(Request(**{**r, "prompt": r["prompt"].copy()}))
+    got = {r.rid: r.out_tokens for r in paged.run()}
+    want = {r.rid: r.out_tokens for r in dense.run()}
+    assert got == want
+    assert len(got) == len(reqs)
+    a = paged.allocator
+    assert a.pages_in_use_by_shard == [0, 0]
+    assert a.pages_free_by_shard == [a.pages_per_shard - 1] * 2
+    assert not paged.prefix_index and not paged._held and not a._refs
     assert all(not p for p in paged.slot_pages)
