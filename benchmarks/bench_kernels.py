@@ -1,6 +1,29 @@
 """Kernel micro-benchmarks (CPU interpret wall time is NOT TPU performance;
 the derived column is the analytic TPU roofline time for the same call:
-max(bytes/HBM_bw, flops/MXU) from the kernel's own tile arithmetic)."""
+max(bytes/HBM_bw, flops/MXU) from the kernel's own tile arithmetic).
+
+Three sections beyond the raw kernel table:
+
+  decode tokens/sec : the paged-attention decode step as served — one
+      3-D kernel launch per new token (the T=1 hot loop) vs ONE 4-D
+      multi-query launch covering all T tokens of every active slot.
+      The grids compute bitwise-identical outputs (checked here), so the
+      structural win is launches/token: T -> 1.
+  prefill fused vs three-program : one prefill chunk through the fused
+      kernel (ops.prefill_attention_paged — attention + posit KV encode
+      + page scatter in ONE device program) vs the decomposed path
+      (flash_attention, kv encode, insert_chunk_batched: three).  Bit
+      parity of attention output and written pages is asserted.
+  autotune : whether the committed tile cache resolved params for the
+      shapes this benchmark launches (kernels/autotune.hit_report).
+
+Results are written as machine-readable BENCH_kernels.json.  `checks` are
+hard booleans; `gated` carries the structural ratios the CI perf gate
+(benchmarks/perf_gate.py) compares against the committed baseline —
+wall-clock latencies are recorded but never gated (interpret-mode noise).
+
+    PYTHONPATH=src python benchmarks/bench_kernels.py
+"""
 from __future__ import annotations
 
 import time
@@ -9,9 +32,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import P13_2, P16_2, P8_2, PDPUConfig
-from repro.kernels import ops
+try:
+    from benchmarks.timing import time_ms, write_bench_json
+except ImportError:  # bare-script run: benchmarks/ itself is sys.path[0]
+    from timing import time_ms, write_bench_json
+from repro.core import posit
+from repro.core.formats import P13_2, P16_1, P16_2, P8_2, PDPUConfig
+from repro.kernels import autotune, ops
 from repro.launch.mesh import HW
+from repro.models import common, paged
 
 
 def _time(fn, *args, reps=3):
@@ -63,10 +92,158 @@ def rows(rng=None):
     return out
 
 
+def bench_decode_mq(rng):
+    """Decode-step tokens/sec: T single-token 3-D launches vs one 4-D
+    multi-query launch over the same pool — bitwise-identical outputs."""
+    B, T, Hq, Hkv, Dh, ps, M = 4, 8, 4, 2, 8, 4, 6
+    fmt = P16_1
+    F = Hkv * Dh
+    n_pages = 1 + B * M
+    kp = posit.pack(jnp.asarray(rng.normal(0, 1, (n_pages, ps, F)),
+                                jnp.float32), fmt)
+    vp = posit.pack(jnp.asarray(rng.normal(0, 1, (n_pages, ps, F)),
+                                jnp.float32), fmt)
+    bt = jnp.asarray(1 + np.arange(B * M).reshape(B, M), jnp.int32)
+    lengths = jnp.asarray(rng.integers(T, M * ps, B), jnp.int32)
+    win = jnp.full((1,), 2 ** 30, jnp.int32)
+    q = jnp.asarray(rng.normal(0, 1, (B, T, Hq, Dh)), jnp.float32)
+
+    def single_loop(q):
+        outs = [ops.paged_attention(q[:, t], kp, vp, bt,
+                                    lengths - (T - 1 - t), win, fmt_kv=fmt)
+                for t in range(T)]
+        return jnp.stack(outs, axis=1)
+
+    def mq(q):
+        return ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=fmt)
+
+    single_ms = time_ms(single_loop, q)
+    mq_ms = time_ms(mq, q)
+    exact = bool(jnp.all(single_loop(q) == mq(q)))
+    return {
+        "slots": B, "new_tokens_per_slot": T,
+        "single_token_ms_per_step": single_ms,
+        "single_token_tokens_per_s": B * T / (single_ms / 1e3),
+        "multi_query_ms_per_step": mq_ms,
+        "multi_query_tokens_per_s": B * T / (mq_ms / 1e3),
+        # structural: one MQ launch replaces T per-token launches
+        "launches_per_token_ratio": float(T),
+        "mq_matches_single_token": exact,
+    }
+
+
+def bench_fused_prefill(rng):
+    """One prefill chunk: fused single-program kernel vs the decomposed
+    three-program path (attention, KV encode, page insert) — bit parity
+    of the attention output and every written non-trash page."""
+    B, C, Hq, Hkv, Dh, ps, M = 2, 8, 4, 2, 8, 4, 6
+    fmt = P16_1
+    F = Hkv * Dh
+    n_pages = 1 + B * M
+    kp = posit.pack(jnp.asarray(rng.normal(0, 1, (n_pages, ps, F)),
+                                jnp.float32), fmt)
+    vp = posit.pack(jnp.asarray(rng.normal(0, 1, (n_pages, ps, F)),
+                                jnp.float32), fmt)
+    bt = jnp.asarray(1 + np.arange(B * M).reshape(B, M), jnp.int32)
+    starts = jnp.asarray([4, 9], jnp.int32)
+    win = jnp.full((1,), 2 ** 30, jnp.int32)
+    q = jnp.asarray(rng.normal(0, 1, (B, C, Hq, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+
+    def three_program(q, k, v):
+        k_codes = posit.pack(k.reshape(B, C, -1), fmt)        # program 1
+        v_codes = posit.pack(v.reshape(B, C, -1), fmt)
+        hist_k = paged.gather_slots(kp, bt)
+        hist_v = paged.gather_slots(vp, bt)
+        k_new = paged.insert_chunk_batched(kp, bt, starts, k_codes)  # 2
+        v_new = paged.insert_chunk_batched(vp, bt, starts, v_codes)
+        S_h = hist_k.shape[1]
+        hist_pos = jnp.broadcast_to(jnp.arange(S_h, dtype=jnp.int32)[None],
+                                    (B, S_h))
+        hist_pos = jnp.where(hist_pos < starts[:, None], hist_pos, -1)
+        pos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+        kd = posit.unpack(hist_k, fmt).reshape(B, S_h, Hkv, Dh)
+        vd = posit.unpack(hist_v, fmt).reshape(B, S_h, Hkv, Dh)
+        attn = common.flash_attention(                        # program 3
+            q, jnp.concatenate([kd, k], axis=1),
+            jnp.concatenate([vd, v], axis=1), pos,
+            jnp.concatenate([hist_pos, pos], axis=1), causal=True,
+            window=None)
+        return attn, k_new, v_new
+
+    def fused(q, k, v):
+        return ops.prefill_attention_paged(q, k, v, kp, vp, bt, starts, win,
+                                           fmt_kv=fmt)
+
+    three_ms = time_ms(three_program, q, k, v)
+    fused_ms = time_ms(fused, q, k, v)
+    a0, k0, v0 = three_program(q, k, v)
+    a1, k1, v1 = fused(q, k, v)
+    exact = bool(jnp.all(a0 == a1) and jnp.all(k0[1:] == k1[1:])
+                 and jnp.all(v0[1:] == v1[1:]))
+    return {
+        "slots": B, "chunk": C,
+        "three_program_ms": three_ms,
+        "fused_ms": fused_ms,
+        # structural: 3 logical device programs collapse into 1
+        "programs_per_chunk_ratio": 3.0,
+        "fused_bit_identical": exact,
+    }
+
+
 def main():
+    rng = np.random.default_rng(0)
     print("kernel,us_per_call_cpu_interpret,us_per_call_tpu_roofline")
-    for name, us, tpu in rows():
+    kernel_rows = rows(rng)
+    for name, us, tpu in kernel_rows:
         print(f"{name},{us:.0f},{tpu:.2f}")
+
+    decode = bench_decode_mq(rng)
+    print(f"\ndecode: {decode['slots']} slots x "
+          f"{decode['new_tokens_per_slot']} tokens — "
+          f"single-token {decode['single_token_ms_per_step']:.1f} ms "
+          f"({decode['single_token_tokens_per_s']:.0f} tok/s) vs "
+          f"multi-query {decode['multi_query_ms_per_step']:.1f} ms "
+          f"({decode['multi_query_tokens_per_s']:.0f} tok/s); "
+          f"bitwise match: {decode['mq_matches_single_token']}")
+
+    prefill = bench_fused_prefill(rng)
+    print(f"prefill: three-program {prefill['three_program_ms']:.1f} ms vs "
+          f"fused {prefill['fused_ms']:.1f} ms per chunk; "
+          f"bit identical: {prefill['fused_bit_identical']}")
+
+    tuned = autotune.hit_report()
+    n_entries = len(autotune.get_cache().entries)
+    print(f"autotune: {n_entries} cache entries; hits/misses: {tuned}")
+
+    checks = {
+        "mq_matches_single_token": decode["mq_matches_single_token"],
+        "fused_prefill_bit_identical": prefill["fused_bit_identical"],
+        "autotune_cache_loaded": n_entries > 0,
+    }
+    payload = {
+        "kernels": [{"name": n, "us_cpu_interpret": u, "us_tpu_roofline": t}
+                    for n, u, t in kernel_rows],
+        "decode": decode,
+        "prefill": prefill,
+        "autotune": {"entries": n_entries, "report": tuned},
+        # the CI perf gate compares these (>10% regression fails); they
+        # are structural ratios, deterministic on any host
+        "gated": {
+            "decode_launches_per_token_ratio":
+                decode["launches_per_token_ratio"],
+            "prefill_programs_per_chunk_ratio":
+                prefill["programs_per_chunk_ratio"],
+        },
+        "checks": checks,
+    }
+    write_bench_json("kernels", payload)
+    failed = [k for k, ok in checks.items() if not ok]
+    if failed:
+        raise SystemExit(f"kernel benchmark checks failed: {failed}")
+    print("all kernel benchmark checks passed:",
+          ", ".join(sorted(checks)))
 
 
 if __name__ == "__main__":

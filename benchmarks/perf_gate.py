@@ -1,0 +1,125 @@
+"""CI perf gate: compare fresh BENCH_*.json against the committed baselines.
+
+    BENCH_OUTPUT_DIR=/tmp/bench PYTHONPATH=src python benchmarks/perf_gate.py
+
+For every committed baseline `BENCH_<name>.json` at the repo root, the gate
+loads the freshly-generated counterpart from `BENCH_OUTPUT_DIR` (the bench
+entrypoints write there when it is set — CI points it at a scratch dir so
+the committed baselines are never clobbered before comparison) and fails
+loudly when:
+
+  * the fresh file is missing (a bench stopped emitting its JSON);
+  * any boolean under the baseline's `checks` dict is no longer true
+    (structural guarantees: bit parity, storage ratios, token parity);
+  * any metric under the baseline's `gated` dict regressed by more than
+    `TOLERANCE` (10%).  Gated metrics are deterministic structural ratios
+    (device programs per prefill chunk, kernel launches per decode token,
+    KV storage reduction) — higher is better for all of them.  Raw
+    wall-clock latencies are deliberately NOT gated: CI hosts run the
+    Pallas kernels in interpret mode, where timing noise swamps any real
+    signal; latencies stay recorded in the JSONs for offline tracking.
+
+A handful of named baseline metrics outside `gated` are also enforced for
+benches that predate the `gated` convention (see LEGACY_GATES).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+TOLERANCE = 0.10  # >10% regression on any gated metric fails
+
+# bench name -> [(dotted json path, direction)] for baselines that carry
+# their deterministic ratios outside a `gated` dict.  "higher" metrics may
+# drop at most TOLERANCE below baseline; "lower" may rise at most that.
+LEGACY_GATES = {
+    "exec_paths": [
+        ("paged_serving.kv_storage_ratio", "higher"),
+        ("prefix_sharing.prefill_page_reduction", "higher"),
+        ("prefix_sharing.pages_vs_single_ratio", "lower"),
+    ],
+}
+
+
+def _dig(d, dotted):
+    for part in dotted.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def gate_one(name: str, base: dict, fresh: dict):
+    """All failures for one bench (empty list = pass)."""
+    fails = []
+    for key, ok in (base.get("checks") or {}).items():
+        if ok is not True:
+            continue  # never gate on a check the baseline itself failed
+        got = (fresh.get("checks") or {}).get(key)
+        if got is not True:
+            fails.append(f"check '{key}': baseline true, fresh {got!r}")
+    gates = [(f"gated.{k}", "higher") for k in (base.get("gated") or {})]
+    gates += LEGACY_GATES.get(name, [])
+    for path, direction in gates:
+        want = _dig(base, path)
+        got = _dig(fresh, path)
+        if want is None:
+            continue
+        if got is None or not isinstance(got, (int, float)):
+            fails.append(f"metric '{path}': missing from fresh results")
+            continue
+        if direction == "higher" and got < want * (1 - TOLERANCE):
+            fails.append(f"metric '{path}': {got:.4g} < "
+                         f"{want:.4g} - {TOLERANCE:.0%}")
+        if direction == "lower" and got > want * (1 + TOLERANCE):
+            fails.append(f"metric '{path}': {got:.4g} > "
+                         f"{want:.4g} + {TOLERANCE:.0%}")
+    return fails
+
+
+def main():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    fresh_dir = os.environ.get("BENCH_OUTPUT_DIR", ".")
+    baselines = sorted(glob.glob(os.path.join(repo, "BENCH_*.json")))
+    if not baselines:
+        print("perf gate: no committed BENCH_*.json baselines found")
+        return 1
+    failures = {}
+    for path in baselines:
+        fname = os.path.basename(path)
+        name = fname[len("BENCH_"):-len(".json")]
+        with open(path) as f:
+            base = json.load(f)
+        fresh_path = os.path.join(fresh_dir, fname)
+        if os.path.abspath(fresh_path) == os.path.abspath(path):
+            print(f"perf gate: BENCH_OUTPUT_DIR resolves onto the committed "
+                  f"baseline {fname}; set it to a scratch directory")
+            return 1
+        if not os.path.exists(fresh_path):
+            failures[name] = [f"fresh {fname} missing from {fresh_dir}"]
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        fails = gate_one(name, base, fresh)
+        if fails:
+            failures[name] = fails
+        else:
+            n_checks = len(base.get("checks") or {})
+            n_gates = len(base.get("gated") or {}) + \
+                len(LEGACY_GATES.get(name, []))
+            print(f"perf gate: {fname} OK "
+                  f"({n_checks} checks, {n_gates} gated metrics)")
+    if failures:
+        print("\nperf gate FAILED:")
+        for name, fails in sorted(failures.items()):
+            for f in fails:
+                print(f"  [{name}] {f}")
+        return 1
+    print("perf gate passed for all baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,7 @@ import numpy as np
 from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.core.quant import policy_by_name
+from repro.kernels import autotune
 from repro.models import api
 from repro.serve import Request, ServingEngine
 
@@ -104,6 +105,14 @@ with tempfile.TemporaryDirectory() as ckpt_dir:
     print(f"batched prefill: {n_chunks} chunks in "
           f"{sum(batches.values())} device calls "
           f"(batch-size histogram {dict(sorted(batches.items()))})")
+    summ = engine.execution_summary()
+    print(f"fused prefill: {'on' if summ['fused_prefill'] else 'off'} — "
+          f"{summ['prefill_device_programs']} attention-stage device "
+          f"programs for {summ['prefill_chunks']} chunk groups "
+          f"(1/chunk fused, 3/chunk decomposed)")
+    tuned = autotune.hit_report()
+    print(f"autotune cache: {len(autotune.get_cache().entries)} entries; "
+          f"tuned-config hits/misses this run: {tuned or 'none'}")
 
     # coded-page storage ratio: what the dense f32 worst-case cache would
     # allocate vs the coded pages that peak traffic actually touched

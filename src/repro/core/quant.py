@@ -106,6 +106,14 @@ class QuantPolicy:
                   instead of a per-slot loop: one compile per bucket and
                   one device call per (step, bucket) regardless of how
                   many slots are filling.
+    fused_prefill : serving-kernel knob — paged prefill chunks run the
+                  fused Pallas program (kernels/prefill_attention.py):
+                  chunk attention + posit KV encode + page scatter in ONE
+                  device program instead of three (flash_attention,
+                  kv_encode, insert_chunk).  Bit-identical to the
+                  decomposed path; applies only when the slot's page span
+                  fits one flash chunk (paged.fused_prefill_span_ok),
+                  otherwise the decomposed path runs for that layout.
     pdpu_n, pdpu_w_m : chunk size and alignment width of the PDPU instance
                   used by the 'bit_exact' plan (paper Table I knobs).
     """
@@ -119,6 +127,7 @@ class QuantPolicy:
     kv_page_size: int = 16
     prefix_sharing: bool = True
     batched_prefill: bool = True
+    fused_prefill: bool = True
     pdpu_n: int = 4
     pdpu_w_m: int = 14
 

@@ -25,8 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import PDPUConfig, PositFormat
+from . import autotune
 from . import posit_codec, posit_matmul, pdpu_dot
 from . import paged_attention as paged_attention_mod
+from . import prefill_attention as prefill_attention_mod
 from . import ref  # noqa: F401  (re-exported for tests/benchmarks)
 
 
@@ -34,19 +36,54 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _resolve(kernel: str, shape, fmts, kw: dict, names) -> dict:
+    """Dispatch-time autotune resolution: fill launch params the caller did
+    not pass explicitly from the tuned cache (kernels/autotune.py).  Shapes
+    are static at trace time, so this is pure host-side lookup; a cache
+    miss leaves the params absent and the kernel's module constants apply
+    (the no-cache fallback)."""
+    missing = [n for n in names if kw.get(n) is None]
+    if not missing:
+        return kw
+    tuned = autotune.lookup(kernel, shape, fmts)
+    if tuned:
+        for n in missing:
+            if tuned.get(n) is not None:
+                kw[n] = tuned[n]
+    return kw
+
+
+def _flat2d(shape):
+    """The codec kernels collapse leading dims: lookup on the (R, C) the
+    kernel actually launches."""
+    if len(shape) < 2:
+        return (1, int(shape[0]) if shape else 1)
+    r = 1
+    for d in shape[:-1]:
+        r *= int(d)
+    return (r, int(shape[-1]))
+
+
 def decode(codes, fmt: PositFormat, **kw):
     """posit codes -> f32 (Pallas elementwise kernel)."""
+    kw = _resolve("posit_codec.decode", _flat2d(codes.shape), (fmt,), kw,
+                  ("block_r", "block_c"))
     return posit_codec.decode(codes, fmt, interpret=_interpret(), **kw)
 
 
 def encode(values, fmt: PositFormat, **kw):
     """float -> posit codes in storage dtype (Pallas elementwise kernel)."""
+    kw = _resolve("posit_codec.encode", _flat2d(values.shape), (fmt,), kw,
+                  ("block_r", "block_c"))
     return posit_codec.encode(values, fmt, interpret=_interpret(), **kw)
 
 
 def fused_matmul(a_codes, b_codes, fmt_a: PositFormat, fmt_b: PositFormat,
                  fmt_out: PositFormat | None = None, **kw):
     """Fused posit GEMM: in-kernel decode -> MXU f32 -> single encode."""
+    kw = _resolve("posit_matmul",
+                  (a_codes.shape[0], a_codes.shape[1], b_codes.shape[1]),
+                  (fmt_a, fmt_b), kw, ("bm", "bn", "bk"))
     return posit_matmul.posit_matmul(
         a_codes, b_codes, fmt_a, fmt_b, fmt_out,
         interpret=_interpret(), **kw)
@@ -59,6 +96,10 @@ def fused_matmul_grouped(a_codes, b_codes, fmt_a: PositFormat,
 
     One expert per leading grid dimension; per-expert in-kernel decode,
     f32 MXU accumulate, single encode (fmt_out=None returns f32)."""
+    kw = _resolve("posit_matmul_grouped",
+                  (a_codes.shape[0], a_codes.shape[1], a_codes.shape[2],
+                   b_codes.shape[2]),
+                  (fmt_a, fmt_b), kw, ("bm", "bn", "bk"))
     return posit_matmul.posit_matmul_grouped(
         a_codes, b_codes, fmt_a, fmt_b, fmt_out,
         interpret=_interpret(), **kw)
@@ -72,6 +113,9 @@ def matmul_posit_weights_grouped(x, w_codes, fmt_w: PositFormat, **kw):
     HBM->VMEM as int8/int16 codes and decode on the VPU inside the grouped
     kernel.  Returns f32.
     """
+    kw = _resolve("posit_matmul_grouped",
+                  (x.shape[0], x.shape[1], x.shape[2], w_codes.shape[2]),
+                  (None, fmt_w), kw, ("bm", "bn", "bk"))
     return posit_matmul.posit_matmul_grouped(
         x.astype(jnp.float32), w_codes, None, fmt_w, None,
         interpret=_interpret(), **kw)
@@ -80,18 +124,50 @@ def matmul_posit_weights_grouped(x, w_codes, fmt_w: PositFormat, **kw):
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
                     fmt_kv: PositFormat | None = None,
                     softcap_val: float = 0.0, page_ok=None,
-                    partials: bool = False):
+                    partials: bool = False, t_block: int | None = None):
     """Paged-attention decode: gather KV pages by block table, decode posit
     codes in-kernel next to the q·k dot, streaming softmax across pages.
     See kernels/paged_attention.py; forward-only (decode hot path).
 
+    q may be [B, Hq, Dh] (one token per slot) or [B, T, Hq, Dh] — the
+    multi-query grid covering T new tokens per slot in one launch, with
+    the query tile `t_block` resolved through the autotune cache when not
+    given (any tiling is bitwise identical; T=1 takes the 3-D path).
+
     page_ok masks pages out of the streaming softmax (a kv_pages shard
     passes its ownership mask); partials=True returns the unnormalized
     (o, m, l) state for cross-shard merging via `merge_attn_partials`."""
+    if q.ndim == 4 and t_block is None:
+        kw = _resolve(
+            "paged_attention",
+            (q.shape[0], q.shape[1], block_tables.shape[1],
+             k_pages.shape[1], k_pages.shape[2]),
+            (fmt_kv,), {}, ("t_block",))
+        tb = kw.get("t_block")
+        t_block = tb if tb is not None and q.shape[1] % tb == 0 else None
     return paged_attention_mod.paged_attention(
         q, k_pages, v_pages, block_tables, lengths, window,
         fmt_kv=fmt_kv, softcap_val=softcap_val, interpret=_interpret(),
-        page_ok=page_ok, partials=partials)
+        page_ok=page_ok, partials=partials, t_block=t_block)
+
+
+def prefill_attention_paged(q, k, v, k_pages, v_pages, block_tables, starts,
+                            window, fmt_kv: PositFormat | None = None,
+                            compute_dtype=jnp.float32,
+                            softcap_val: float = 0.0, hist_k=None,
+                            hist_v=None, page_ok=None):
+    """Fused prefill: chunk attention + posit KV encode + page insert in a
+    single device program (kernels/prefill_attention.py) — bit-identical
+    to the decomposed flash_attention -> kv_encode -> insert_chunk path
+    for spans within one flash chunk (`paged.fused_prefill_span_ok`).
+
+    Sharded pools pass the psum-gathered history (hist_k/hist_v), the
+    localized block tables, and their ownership mask as page_ok."""
+    return prefill_attention_mod.prefill_attention_paged(
+        q, k, v, k_pages, v_pages, block_tables, starts, window,
+        fmt_kv=fmt_kv, compute_dtype=compute_dtype, softcap_val=softcap_val,
+        interpret=_interpret(), hist_k=hist_k, hist_v=hist_v,
+        page_ok=page_ok)
 
 
 def merge_attn_partials(o, m, l, axis_name: str):

@@ -119,17 +119,165 @@ def _paged_attention_kernel(bt_ref, len_ref, win_ref, ok_ref, q_ref, k_ref,
             out_ref[0] = o.reshape(n_heads, head_dim)
 
 
+def _paged_attention_mq_kernel(bt_ref, len_ref, win_ref, ok_ref, q_ref,
+                               k_ref, v_ref, *refs,
+                               fmt_kv: PositFormat | None, page_size: int,
+                               t_total: int, t_block: int, n_heads: int,
+                               n_kv_heads: int, head_dim: int,
+                               softcap_val: float, partials: bool):
+    """Multi-query grid: one launch covers T new tokens per slot.
+
+    Query row i of slot b sits at absolute position lengths[b] - T + i
+    (all T tokens already inserted); causality between the new tokens is
+    enforced by the same position mask that guards written-prefix reads.
+    Rows are independent, so any t_block tiling of T is bitwise identical
+    — t_block is the autotuned launch parameter.
+    """
+    if partials:
+        out_ref, m_ref, l_ref, m_scr, l_scr, o_scr = refs
+    else:
+        (out_ref, m_scr, l_scr, o_scr), m_ref, l_ref = refs, None, None
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    p = pl.program_id(2)
+    G = n_heads // n_kv_heads
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        o_scr[...] = jnp.zeros_like(o_scr)
+
+    if fmt_kv is None:
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+    else:
+        k = posit.decode(k_ref[0].astype(jnp.int32) & fmt_kv.mask, fmt_kv)
+        v = posit.decode(v_ref[0].astype(jnp.int32) & fmt_kv.mask, fmt_kv)
+    k = k.reshape(page_size, n_kv_heads, head_dim)
+    v = v.reshape(page_size, n_kv_heads, head_dim)
+
+    scale = 1.0 / math.sqrt(head_dim)
+    qg = q_ref[0].reshape(t_block, n_kv_heads, G, head_dim) \
+                 .astype(jnp.float32) * scale
+    s = jnp.einsum("thgd,khd->thgk", qg, k)  # [tb, Hkv, G, ps]
+    s = _softcap(s, softcap_val)
+
+    length = len_ref[b]
+    pos = p * page_size + jax.lax.iota(jnp.int32, page_size)
+    q_pos = length - t_total + t * t_block + jax.lax.iota(jnp.int32, t_block)
+    mask = (pos[None, :] <= q_pos[:, None]) \
+        & ((q_pos[:, None] - pos[None, :]) < win_ref[0]) \
+        & (ok_ref[b, p] > 0)
+    s = jnp.where(mask[:, None, None, :], s, _NEG)
+
+    m_prev, l_prev, o_prev = m_scr[...], l_scr[...], o_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    pr = jnp.exp(s - m_new[..., None])
+    pr = jnp.where(mask[:, None, None, :], pr, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = l_prev * corr + jnp.sum(pr, axis=-1)
+    o_scr[...] = o_prev * corr[..., None] \
+        + jnp.einsum("thgk,khd->thgd", pr, v)
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _finalize():
+        if partials:
+            out_ref[0] = o_scr[...].reshape(t_block, n_heads, head_dim)
+            m_ref[0] = m_scr[...].reshape(t_block, n_heads)
+            l_ref[0] = l_scr[...].reshape(t_block, n_heads)
+        else:
+            o = o_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+            out_ref[0] = o.reshape(t_block, n_heads, head_dim)
+
+
+def _paged_attention_mq(q, k_pages, v_pages, block_tables, lengths, window,
+                        fmt_kv, softcap_val, interpret, page_ok, partials,
+                        t_block):
+    """4-D (multi-query) entry: q [B, T, Hq, Dh], grid (B, T//tb, M)."""
+    B, T, Hq, Dh = q.shape
+    n_pages, page_size, kvd = k_pages.shape
+    Hkv = kvd // Dh
+    if Hkv * Dh != kvd or Hq % Hkv:
+        raise ValueError(f"page feature dim {kvd} incompatible with "
+                         f"q heads {Hq} x head_dim {Dh}")
+    M = block_tables.shape[1]
+    if page_ok is None:
+        page_ok = jnp.ones((B, M), jnp.int32)
+    if t_block is None:
+        t_block = next(tb for tb in (8, 4, 2, 1) if T % tb == 0)
+    if T % t_block:
+        raise ValueError(f"t_block={t_block} must divide T={T}")
+
+    def _qmap(b, t, p, bt, ln, wn, ok):
+        return (b, t, 0, 0)
+
+    out_spec = pl.BlockSpec((1, t_block, Hq, Dh), _qmap)
+    out_shape = jax.ShapeDtypeStruct((B, T, Hq, Dh), jnp.float32)
+    if partials:
+        ml_spec = pl.BlockSpec((1, t_block, Hq),
+                               lambda b, t, p, bt, ln, wn, ok: (b, t, 0))
+        ml_shape = jax.ShapeDtypeStruct((B, T, Hq), jnp.float32)
+        out_specs = [out_spec, ml_spec, ml_spec]
+        out_shapes = [out_shape, ml_shape, ml_shape]
+    else:
+        out_specs, out_shapes = out_spec, out_shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, T // t_block, M),
+        in_specs=[
+            out_spec,
+            pl.BlockSpec((1, page_size, kvd),
+                         lambda b, t, p, bt, ln, wn, ok: (bt[b, p], 0, 0)),
+            pl.BlockSpec((1, page_size, kvd),
+                         lambda b, t, p, bt, ln, wn, ok: (bt[b, p], 0, 0)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((t_block, Hkv, Hq // Hkv), jnp.float32),
+            pltpu.VMEM((t_block, Hkv, Hq // Hkv), jnp.float32),
+            pltpu.VMEM((t_block, Hkv, Hq // Hkv, Dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_attention_mq_kernel, fmt_kv=fmt_kv, page_size=page_size,
+        t_total=T, t_block=t_block, n_heads=Hq, n_kv_heads=Hkv, head_dim=Dh,
+        softcap_val=softcap_val, partials=partials)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      window.astype(jnp.int32), page_ok.astype(jnp.int32),
+      q.astype(jnp.float32), k_pages, v_pages)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("fmt_kv", "softcap_val", "interpret", "partials"),
+    static_argnames=("fmt_kv", "softcap_val", "interpret", "partials",
+                     "t_block"),
 )
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
                     fmt_kv: PositFormat | None = None,
                     softcap_val: float = 0.0, interpret: bool = False,
-                    page_ok=None, partials: bool = False):
-    """Single-token attention over block-table-paged, posit-coded KV.
+                    page_ok=None, partials: bool = False,
+                    t_block: int | None = None):
+    """Single- or multi-token attention over block-table-paged posit KV.
 
-    q            : [B, Hq, Dh] float query (one decode token per slot).
+    q            : [B, Hq, Dh] float query (one decode token per slot), or
+                   [B, T, Hq, Dh] for the multi-query grid — one launch
+                   covers T new tokens per slot (token i of slot b at
+                   absolute position lengths[b] - T + i, causally masked
+                   against both history and the other new tokens; T=1
+                   matches the 3-D path exactly).  `t_block` tiles T
+                   (autotuned; rows are independent so any tiling is
+                   bitwise identical); the 3-D path ignores it.
     k/v_pages    : [n_pages, page_size, Hkv*Dh] posit codes (int8/int16,
                    decoded in-kernel via fmt_kv) or float (fmt_kv=None).
     block_tables : [B, max_pages] int32 — page j holds the slot's positions
@@ -149,13 +297,18 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
                    kernel's own finalize once merged, so a slot whose pages
                    live on one shard is bitwise identical to partials=False).
 
-    Returns [B, Hq, Dh] f32, or the (o, m, l) triple when partials=True.
+    Returns [B, Hq, Dh] f32 (or [B, T, Hq, Dh] for 4-D q), or the
+    corresponding (o, m, l) triple when partials=True.
     """
-    B, Hq, Dh = q.shape
-    n_pages, page_size, kvd = k_pages.shape
     if v_pages.shape != k_pages.shape:
         raise ValueError(f"k/v page pools differ: {k_pages.shape} vs "
                          f"{v_pages.shape}")
+    if q.ndim == 4:
+        return _paged_attention_mq(q, k_pages, v_pages, block_tables,
+                                   lengths, window, fmt_kv, softcap_val,
+                                   interpret, page_ok, partials, t_block)
+    B, Hq, Dh = q.shape
+    n_pages, page_size, kvd = k_pages.shape
     Hkv = kvd // Dh
     if Hkv * Dh != kvd or Hq % Hkv:
         raise ValueError(f"page feature dim {kvd} incompatible with "

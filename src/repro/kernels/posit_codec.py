@@ -52,9 +52,14 @@ def _as_2d(x):
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "block_r", "block_c", "interpret"))
-def decode(codes, fmt: PositFormat, block_r=_BLOCK_R, block_c=_BLOCK_C,
+def decode(codes, fmt: PositFormat, block_r=None, block_c=None,
            interpret=False):
-    """posit codes (int8/int16/int32, any shape) -> float32 values."""
+    """posit codes (int8/int16/int32, any shape) -> float32 values.
+
+    block_r/block_c default to the module constants; ops.decode resolves
+    them through the autotune cache per (shape bucket, fmt, backend)."""
+    block_r = _BLOCK_R if block_r is None else block_r
+    block_c = _BLOCK_C if block_c is None else block_c
     x2, orig_shape = _as_2d(codes)
     R, C = x2.shape
     br, bc = min(block_r, R), min(block_c, C)
@@ -70,9 +75,14 @@ def decode(codes, fmt: PositFormat, block_r=_BLOCK_R, block_c=_BLOCK_C,
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "block_r", "block_c", "interpret"))
-def encode(values, fmt: PositFormat, block_r=_BLOCK_R, block_c=_BLOCK_C,
+def encode(values, fmt: PositFormat, block_r=None, block_c=None,
            interpret=False):
-    """float values (any shape) -> posit codes in the storage dtype."""
+    """float values (any shape) -> posit codes in the storage dtype.
+
+    block_r/block_c default to the module constants; ops.encode resolves
+    them through the autotune cache per (shape bucket, fmt, backend)."""
+    block_r = _BLOCK_R if block_r is None else block_r
+    block_c = _BLOCK_C if block_c is None else block_c
     out_dtype = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[fmt.storage_bits]
     x2, orig_shape = _as_2d(values.astype(jnp.float32))
     R, C = x2.shape

@@ -98,7 +98,7 @@ def _grouped_matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *,
 )
 def posit_matmul_grouped(a, b_codes, fmt_a: PositFormat | None,
                          fmt_b: PositFormat, fmt_out: PositFormat | None = None,
-                         bm=_BM, bn=_BN, bk=_BK, interpret=False):
+                         bm=None, bn=None, bk=None, interpret=False):
     """Grouped fused GEMM: [E,M,K] x [E,K,N] -> [E,M,N], one expert per
     leading grid dimension.
 
@@ -113,6 +113,9 @@ def posit_matmul_grouped(a, b_codes, fmt_a: PositFormat | None,
     M/N/K pad to tile multiples internally (posit code 0 and f32 0.0 are
     both exact zeros, so padding never perturbs the accumulation).
     """
+    bm = _BM if bm is None else bm
+    bn = _BN if bn is None else bn
+    bk = _BK if bk is None else bk
     E, M, K = a.shape
     Eb, K2, N = b_codes.shape
     if E != Eb or K != K2:
@@ -164,7 +167,7 @@ def posit_matmul_grouped(a, b_codes, fmt_a: PositFormat | None,
 )
 def posit_matmul(a_codes, b_codes, fmt_a: PositFormat, fmt_b: PositFormat,
                  fmt_out: PositFormat | None = None,
-                 bm=_BM, bn=_BN, bk=_BK, interpret=False):
+                 bm=None, bn=None, bk=None, interpret=False):
     """[M,K] posit codes x [K,N] posit codes -> [M,N].
 
     fmt_out=None returns f32 (the mixed-precision "higher-precision output"
@@ -172,6 +175,9 @@ def posit_matmul(a_codes, b_codes, fmt_a: PositFormat, fmt_b: PositFormat,
     their storage dtype.  M/N/K are padded to tile multiples internally —
     posit code 0 decodes to 0.0, so zero padding is exact.
     """
+    bm = _BM if bm is None else bm
+    bn = _BN if bn is None else bn
+    bk = _BK if bk is None else bk
     M, K = a_codes.shape
     K2, N = b_codes.shape
     if K != K2:

@@ -1,0 +1,291 @@
+"""Pallas kernel: fused prefill-attention that writes posit KV pages.
+
+Chunked prefill used to be three device stages per chunk (models/
+transformer.py `_chunk_attn`): flash attention over [gathered history |
+raw chunk], a posit `kv_encode` of the chunk's K/V, and a
+`paged.insert_chunk(_batched)` scatter into the page pool.  This kernel
+collapses them into ONE device program per chunk — the PDPU argument
+(fuse the datapath instead of composing discrete units) applied to the
+serving prefill hot path:
+
+  * per (slot, page) grid cell the slot's page arrives HBM->VMEM at posit
+    code width via the scalar-prefetched block table (no dense gather in
+    HBM), is decoded in-kernel, and is staged into a VMEM history scratch,
+  * the same cell posit-encodes the chunk rows that land in this page and
+    merge-writes them back into the pool *in place*
+    (`input_output_aliases` + a block-table-driven output index_map:
+    pages outside the chunk span — or not owned by this shard — redirect
+    to the trash page 0, so untouched pages pass through unchanged),
+  * on the slot's last page step the full-span softmax runs over
+    [staged history | raw chunk] and the attention output is written.
+
+Bit-exactness contract
+----------------------
+
+The attention here is NOT the page-streamed softmax of
+kernels/paged_attention.py: accumulating page-by-page changes the
+floating-point grouping and cannot reproduce `common.flash_attention`
+bit-for-bit.  Instead, for spans that fit one flash chunk
+(history + chunk <= models.paged.FLASH_CHUNK, every serving config), the
+kernel replays flash_attention's single-chunk degenerate pass op-for-op —
+same masking, same running-max/correction arithmetic including the
+`o0 * corr + pv` step (dropping it flips -0.0 signs), same finalize —
+so the fused path is bit-identical to the three-program path.  Callers
+(models/transformer.py) gate on `paged.fused_prefill_span_ok` and fall
+back to the decomposed path for longer spans.
+
+Intra-chunk attention uses the *raw* (pre-encode) k/v and only history
+reads see decoded codes, exactly like `_chunk_attn`; history decode
+replays the `kv_decode` dtype chain (f32 -> compute dtype -> k dtype).
+
+Sharded pools (`hist_k/hist_v` given): history cannot be staged from the
+local sub-pool (other shards hold part of it), so the caller passes the
+exact psum-gathered code rows (`paged.gather_slots(..., shard)`) and the
+kernel reads history from that dense input instead of scratch — attention
+is then computed identically on every shard while `page_ok` restricts the
+page writes to owned pages (non-owned chunk pages redirect to the local
+trash page, the `insert_chunk(shard=...)` contract).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import posit
+from repro.core.formats import PositFormat
+
+_NEG = -2.0e38
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def _softcap(x, cap: float):
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _decode_hist(x, fmt_kv, compute_dtype, out_dtype):
+    """Replay common.kv_decode + the `.astype(k.dtype)` chain bit-exactly."""
+    if fmt_kv is None:
+        return x.astype(out_dtype)
+    val = posit.decode(x.astype(jnp.int32) & fmt_kv.mask, fmt_kv)
+    return val.astype(compute_dtype).astype(out_dtype)
+
+
+def _fused_prefill_kernel(bt_ref, st_ref, win_ref, ok_ref, q_ref, k_ref,
+                          v_ref, *refs, fmt_kv: PositFormat | None,
+                          compute_dtype, page_size: int, chunk: int,
+                          n_pages_per_slot: int, n_heads: int,
+                          n_kv_heads: int, head_dim: int, softcap_val: float,
+                          dense_hist: bool):
+    if dense_hist:
+        hk_ref, hv_ref, kp_ref, vp_ref, attn_ref, kp_out, vp_out = refs
+        hk_scr = hv_scr = None
+    else:
+        kp_ref, vp_ref, attn_ref, kp_out, vp_out, hk_scr, hv_scr = refs
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    ps, C, M = page_size, chunk, n_pages_per_slot
+    F = n_kv_heads * head_dim
+    start = st_ref[b]
+
+    # Snapshot the page before any aliased output write: history staging
+    # and the read side of the merge must see pre-insert pool content
+    # (exactly what paged.gather_slot would have gathered).
+    old_k = kp_ref[0]
+    old_v = vp_ref[0]
+
+    if not dense_hist:
+        hk_scr[pl.ds(p * ps, ps)] = _decode_hist(old_k, fmt_kv, compute_dtype,
+                                                 hk_scr.dtype)
+        hv_scr[pl.ds(p * ps, ps)] = _decode_hist(old_v, fmt_kv, compute_dtype,
+                                                 hv_scr.dtype)
+
+    # ---- in-kernel encode + page write ------------------------------------
+    # rows r of page p hold absolute positions p*ps + r; the chunk occupies
+    # [start, start + C).  Select each covered row's raw chunk k/v with a
+    # 0/1 matmul (exact: one surviving term per row), encode, merge with the
+    # old page content, write.  The output index_map redirects pages outside
+    # the chunk span (or not owned by this shard) to the trash page.
+    rpos = p * ps + jax.lax.iota(jnp.int32, ps)
+    j = rpos - start
+    in_chunk = (j >= 0) & (j < C)
+    sel = (j[:, None] == jax.lax.broadcasted_iota(jnp.int32, (ps, C), 1))
+    sel_f = sel.astype(jnp.float32)
+    kc = k_ref[0].reshape(C, F)
+    vc = v_ref[0].reshape(C, F)
+    k_rows = jnp.dot(sel_f, kc.astype(jnp.float32)).astype(kc.dtype)
+    v_rows = jnp.dot(sel_f, vc.astype(jnp.float32)).astype(vc.dtype)
+    if fmt_kv is None:
+        k_codes = k_rows.astype(compute_dtype)
+        v_codes = v_rows.astype(compute_dtype)
+    else:
+        k_codes = posit.encode(k_rows, fmt_kv)
+        v_codes = posit.encode(v_rows, fmt_kv)
+    wm = in_chunk[:, None]
+    kp_out[0] = jnp.where(wm, k_codes.astype(old_k.dtype), old_k)
+    vp_out[0] = jnp.where(wm, v_codes.astype(old_v.dtype), old_v)
+
+    # ---- attention on the slot's last page step ---------------------------
+    @pl.when(p == M - 1)
+    def _attend():
+        S_h = M * ps
+        kdt = k_ref.dtype
+        if dense_hist:
+            hk = _decode_hist(hk_ref[0], fmt_kv, compute_dtype, kdt)
+            hv = _decode_hist(hv_ref[0], fmt_kv, compute_dtype, kdt)
+        else:
+            hk = hk_scr[...]
+            hv = hv_scr[...]
+        G = n_heads // n_kv_heads
+        scale = 1.0 / math.sqrt(head_dim)
+        qg = q_ref[0].reshape(C, n_kv_heads, G, head_dim) \
+                     .astype(jnp.float32) * scale
+        k_all = jnp.concatenate(
+            [hk.reshape(S_h, n_kv_heads, head_dim), k_ref[0]], axis=0)
+        v_all = jnp.concatenate(
+            [hv.reshape(S_h, n_kv_heads, head_dim), v_ref[0]], axis=0)
+        hist_pos = jax.lax.iota(jnp.int32, S_h)
+        hist_pos = jnp.where(hist_pos < start, hist_pos, -1)
+        q_pos = start + jax.lax.iota(jnp.int32, C)
+        kv_pos = jnp.concatenate([hist_pos, q_pos])
+        # flash_attention's single-chunk pass, replayed verbatim (B=1 blocks)
+        s = jnp.einsum("qhgd,khd->hgqk", qg, k_all.astype(jnp.float32))
+        s = _softcap(s, softcap_val)
+        mask = kv_pos[None, :] >= 0
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < win_ref[0]
+        s = jnp.where(mask[None, None, :, :], s, _NEG)
+        m0 = jnp.full((n_kv_heads, G, C), _NEG, jnp.float32)
+        l0 = jnp.zeros((n_kv_heads, G, C), jnp.float32)
+        o0 = jnp.zeros((n_kv_heads, G, C, head_dim), jnp.float32)
+        m_new = jnp.maximum(m0, jnp.max(s, axis=-1))
+        pr = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m0 - m_new)
+        l_new = l0 * corr + jnp.sum(pr, axis=-1)
+        pv = jnp.einsum("hgqk,khd->hgqd", pr, v_all.astype(jnp.float32))
+        # keep the o0*corr term: 0.0*corr + (-0.0) is +0.0, matching flash;
+        # writing `pv` alone would flip those signs
+        o_new = o0 * corr[..., None] + pv
+        o = o_new / jnp.maximum(l_new, 1e-30)[..., None]
+        out = jnp.moveaxis(o, 2, 0).reshape(C, n_heads, head_dim)
+        attn_ref[0] = out.astype(q_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt_kv", "compute_dtype", "softcap_val", "interpret"),
+)
+def prefill_attention_paged(q, k, v, k_pages, v_pages, block_tables, starts,
+                            window, fmt_kv: PositFormat | None = None,
+                            compute_dtype=jnp.float32, softcap_val: float = 0.0,
+                            interpret: bool = False, hist_k=None, hist_v=None,
+                            page_ok=None):
+    """Fused prefill: chunk attention + posit KV encode + paged insert.
+
+    q            : [B, C, Hq, Dh] post-rope queries (chunk positions
+                   starts[b] + [0, C)).
+    k, v         : [B, C, Hkv, Dh] raw post-rope chunk keys/values — the
+                   kernel encodes them to the pool's code width itself.
+    k/v_pages    : [n_pages, page_size, Hkv*Dh] pool (the local sub-pool
+                   under a kv_pages shard).
+    block_tables : [B, M] page ids (pre-localized under a shard); rows of
+                   inactive slots zeroed -> writes land on the trash page.
+    starts       : [B] int32 chunk start position per slot.
+    window       : [1] int32 sliding window (>= max_seq = unbounded).
+    hist_k/v     : optional [B, M*page_size, Hkv*Dh] pre-gathered history
+                   codes (kv_pages-sharded pools: the exact psum gather).
+                   When omitted, history is staged from the pool in-kernel.
+    page_ok      : optional [B, M] write-ownership mask (sharded pools).
+
+    Returns (attn [B, C, Hq, Dh] in q.dtype, k_pages', v_pages') with the
+    pools updated in place (donated/aliased) exactly as
+    `paged.insert_chunk_batched` would have written them.
+    """
+    B, C, Hq, Dh = q.shape
+    n_pages, ps, kvd = k_pages.shape
+    Hkv = kvd // Dh
+    if Hkv * Dh != kvd or Hq % Hkv:
+        raise ValueError(f"page feature dim {kvd} incompatible with "
+                         f"q heads {Hq} x head_dim {Dh}")
+    if k.shape != (B, C, Hkv, Dh) or v.shape != (B, C, Hkv, Dh):
+        raise ValueError(f"chunk k/v shape {k.shape} != {(B, C, Hkv, Dh)}")
+    M = block_tables.shape[1]
+    dense_hist = hist_k is not None
+    if dense_hist and hist_k.shape != (B, M * ps, kvd):
+        raise ValueError(f"hist shape {hist_k.shape} != {(B, M * ps, kvd)}")
+    if page_ok is None:
+        page_ok = jnp.ones((B, M), jnp.int32)
+
+    def _qmap(b, p, bt, st, wn, ok):
+        return (b, 0, 0, 0)
+
+    def _pmap(b, p, bt, st, wn, ok):
+        return (bt[b, p], 0, 0)
+
+    def _wmap(b, p, bt, st, wn, ok):
+        pstart = p * ps
+        w = (pstart < st[b] + C) & (pstart + ps > st[b]) & (ok[b, p] > 0)
+        return (jnp.where(w, bt[b, p], 0), 0, 0)
+
+    chunk_spec = pl.BlockSpec((1, C, Hkv, Dh), _qmap)
+    page_spec = pl.BlockSpec((1, ps, kvd), _pmap)
+    in_specs = [pl.BlockSpec((1, C, Hq, Dh), _qmap), chunk_spec, chunk_spec]
+    inputs = [q, k, v]
+    if dense_hist:
+        hist_spec = pl.BlockSpec((1, M * ps, kvd),
+                                 lambda b, p, bt, st, wn, ok: (b, 0, 0))
+        in_specs += [hist_spec, hist_spec]
+        inputs += [hist_k, hist_v]
+        scratch = []
+    else:
+        scratch = [pltpu.VMEM((M * ps, kvd), k.dtype),
+                   pltpu.VMEM((M * ps, kvd), v.dtype)]
+    in_specs += [page_spec, page_spec]
+    inputs += [k_pages, v_pages]
+    # flattened input index of k_pages/v_pages, counting the 4 scalar-
+    # prefetch operands first — aliased onto pool outputs 1 and 2
+    kp_idx = 4 + len(in_specs) - 2
+    aliases = {kp_idx: 1, kp_idx + 1: 2}
+
+    out_specs = [
+        pl.BlockSpec((1, C, Hq, Dh), _qmap),
+        pl.BlockSpec((1, ps, kvd), _wmap),
+        pl.BlockSpec((1, ps, kvd), _wmap),
+    ]
+    out_shapes = [
+        jax.ShapeDtypeStruct((B, C, Hq, Dh), q.dtype),
+        jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+        jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+    ]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, M),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    kernel = functools.partial(
+        _fused_prefill_kernel, fmt_kv=fmt_kv, compute_dtype=compute_dtype,
+        page_size=ps, chunk=C, n_pages_per_slot=M, n_heads=Hq,
+        n_kv_heads=Hkv, head_dim=Dh, softcap_val=softcap_val,
+        dense_hist=dense_hist)
+    attn, k_new, v_new = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        input_output_aliases=aliases,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(block_tables.astype(jnp.int32), starts.astype(jnp.int32),
+      window.astype(jnp.int32), page_ok.astype(jnp.int32), *inputs)
+    return attn, k_new, v_new

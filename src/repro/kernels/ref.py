@@ -88,3 +88,35 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, window,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, vg.astype(jnp.float32))
     return o.reshape(B, Hq, Dh)
+
+
+def paged_attention_mq_ref(q, k_pages, v_pages, block_tables, lengths,
+                           window, fmt_kv: PositFormat | None = None,
+                           softcap_val: float = 0.0):
+    """Multi-query paged-attention semantics, densely: q [B, T, Hq, Dh],
+    token i of slot b at absolute position lengths[b] - T + i (lengths
+    count all T new tokens as written), masked softmax per token over the
+    slot's gathered pages.  Returns [B, T, Hq, Dh] f32."""
+    B, T, Hq, Dh = q.shape
+    _, ps, kvd = k_pages.shape
+    Hkv = kvd // Dh
+    G = Hq // Hkv
+    M = block_tables.shape[1]
+    S = M * ps
+    kg = k_pages[block_tables].reshape(B, S, Hkv, Dh)
+    vg = v_pages[block_tables].reshape(B, S, Hkv, Dh)
+    if fmt_kv is not None:
+        kg = decode_ref(kg, fmt_kv)
+        vg = decode_ref(vg, fmt_kv)
+    scale = 1.0 / (Dh ** 0.5)
+    qg = q.reshape(B, T, Hkv, G, Dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bthgd,bkhd->bthgk", qg, kg.astype(jnp.float32))
+    if softcap_val > 0:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, None, :]        # [1, 1, S]
+    q_pos = (lengths[:, None] - T + jnp.arange(T)[None, :])[..., None]
+    mask = (pos <= q_pos) & ((q_pos - pos) < window[0])        # [B, T, S]
+    s = jnp.where(mask[:, :, None, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bthgk,bkhd->bthgd", p, vg.astype(jnp.float32))
+    return o.reshape(B, T, Hq, Dh)

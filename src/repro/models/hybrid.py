@@ -219,7 +219,8 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):
     conv/SSM states across chunks (see transformer/mamba prefill_chunk).
     Under a kv_pages shard only the KV pages are distributed; conv/SSM
     states stay replicated.  Returns the last position's logits [1, 1, V]
-    only."""
+    only.  Attention sub-layers ride transformer's `_chunk_attn`, so the
+    fused prefill program (QuantPolicy.fused_prefill) applies here too."""
     C = tokens.shape[1]
     x = common.embed_tokens(params["embed"], tokens, cfg)
     start = cache["length"][slot]

@@ -258,7 +258,9 @@ def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):
 
     Expert routing is per token; the capacity limit applies within the
     chunk, so smoke-scale capacity factors avoid drops per chunk exactly
-    as they do per full prompt."""
+    as they do per full prompt.  The attention stage rides transformer's
+    `_chunk_attn`, so the fused prefill program (QuantPolicy.fused_prefill)
+    applies to MoE paged serving unchanged."""
     C = tokens.shape[1]
     x = common.embed_tokens(params["embed"], tokens, cfg)
     start = cache["length"][slot]

@@ -66,6 +66,21 @@ import jax
 import jax.numpy as jnp
 
 
+# flash_attention's default key-chunk length (models/common.py).  The fused
+# prefill kernel replays flash's single-chunk pass bit-for-bit, so it only
+# applies when a slot's whole page span plus the incoming chunk fit in one
+# flash chunk; tests pin this against the flash_attention default.
+FLASH_CHUNK = 1024
+
+
+def fused_prefill_span_ok(max_pages: int, page_size: int, chunk: int) -> bool:
+    """True when the fused prefill kernel is bit-exact for this geometry:
+    the gathered history (max_pages * page_size rows) plus the new chunk
+    must fit in one flash_attention key chunk, so the decomposed path's
+    streaming scan degenerates to the single pass the kernel replays."""
+    return max_pages * page_size + chunk <= FLASH_CHUNK
+
+
 @dataclasses.dataclass(frozen=True)
 class PagedLayout:
     """Geometry of the paged KV pool.

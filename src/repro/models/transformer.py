@@ -376,6 +376,13 @@ def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
     encode) k/v — matching dense whole-prompt prefill semantics, where
     only re-reads of the cache see quantized values.  Returns
     (post-wo output [1, C, D], k_cache', v_cache').
+
+    When `cfg.quant.fused_prefill` is on and the page span fits one flash
+    chunk, the paged branch runs the fused Pallas program
+    (ops.prefill_attention_paged): attention + KV encode + page scatter
+    in one device call, bit-identical to the decomposed path below.
+    Under a kv_pages shard the exact psum-gathered history is passed in
+    densely and page writes are masked to owned pages.
     """
     _, C, _ = x.shape
     Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -390,6 +397,27 @@ def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
     q_pos = pos[None]
     q = common.rope(q, q_pos, cfg.rope_theta)
     k = common.rope(k, q_pos, cfg.rope_theta)
+    if (bt_row is not None and cfg.quant.fused_prefill
+            and paged.fused_prefill_span_ok(bt_row.shape[0], k_l.shape[1], C)):
+        win = _window_arr(cfg, is_global)
+        starts1 = jnp.reshape(start, (1,)).astype(jnp.int32)
+        if shard is None:
+            attn, k_new, v_new = ops.prefill_attention_paged(
+                q, k, v, k_l, v_l, bt_row[None], starts1, win,
+                fmt_kv=cfg.quant.kv_cache, compute_dtype=cfg.compute_dtype,
+                softcap_val=cfg.logit_softcap)
+        else:
+            hist_k = paged.gather_slot(k_l, bt_row, shard=shard)[None]
+            hist_v = paged.gather_slot(v_l, bt_row, shard=shard)[None]
+            lbt, owned = paged.localize_ids(bt_row[None], k_l.shape[0], shard)
+            attn, k_new, v_new = ops.prefill_attention_paged(
+                q, k, v, k_l, v_l, lbt, starts1, win,
+                fmt_kv=cfg.quant.kv_cache, compute_dtype=cfg.compute_dtype,
+                softcap_val=cfg.logit_softcap, hist_k=hist_k, hist_v=hist_v,
+                page_ok=owned.astype(jnp.int32))
+        out = common.qdot(attn.reshape(1, C, Hq * Dh), p["wo"], cfg.quant,
+                          prec_dtype=common.tp_prec(cfg))
+        return out, k_new, v_new
     k_codes = common.kv_encode(cfg, k.reshape(C, -1))
     v_codes = common.kv_encode(cfg, v.reshape(C, -1))
     if bt_row is not None:
@@ -435,7 +463,11 @@ def _chunk_attn_batched(p, x, cfg: ModelConfig, k_l, v_l, starts, *,
     codes land at [b, starts[b] + j] — callers revert inactive rows.  Rows
     are computationally independent, so each active row is bit-identical
     to the per-slot `_chunk_attn` path.  Returns
-    (post-wo output [B, C, D], k_cache', v_cache')."""
+    (post-wo output [B, C, D], k_cache', v_cache').
+
+    Fuses like `_chunk_attn`: with `cfg.quant.fused_prefill` and a page
+    span within one flash chunk, the whole paged branch is one Pallas
+    program per chunk group (ops.prefill_attention_paged)."""
     B, C, _ = x.shape
     Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     h = common.rms_norm(x, p["ln1"], upcast=not cfg.tp_bf16_reduce)
@@ -448,6 +480,26 @@ def _chunk_attn_batched(p, x, cfg: ModelConfig, k_l, v_l, starts, *,
     pos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None]    # [B, C]
     q = common.rope(q, pos, cfg.rope_theta)
     k = common.rope(k, pos, cfg.rope_theta)
+    if (bt is not None and cfg.quant.fused_prefill
+            and paged.fused_prefill_span_ok(bt.shape[1], k_l.shape[1], C)):
+        win = _window_arr(cfg, is_global)
+        if shard is None:
+            attn, k_new, v_new = ops.prefill_attention_paged(
+                q, k, v, k_l, v_l, bt, starts.astype(jnp.int32), win,
+                fmt_kv=cfg.quant.kv_cache, compute_dtype=cfg.compute_dtype,
+                softcap_val=cfg.logit_softcap)
+        else:
+            hist_k = paged.gather_slots(k_l, bt, shard=shard)
+            hist_v = paged.gather_slots(v_l, bt, shard=shard)
+            lbt, owned = paged.localize_ids(bt, k_l.shape[0], shard)
+            attn, k_new, v_new = ops.prefill_attention_paged(
+                q, k, v, k_l, v_l, lbt, starts.astype(jnp.int32), win,
+                fmt_kv=cfg.quant.kv_cache, compute_dtype=cfg.compute_dtype,
+                softcap_val=cfg.logit_softcap, hist_k=hist_k, hist_v=hist_v,
+                page_ok=owned.astype(jnp.int32))
+        out = common.qdot(attn.reshape(B, C, Hq * Dh), p["wo"], cfg.quant,
+                          prec_dtype=common.tp_prec(cfg))
+        return out, k_new, v_new
     k_codes = common.kv_encode(cfg, k.reshape(B, C, -1))
     v_codes = common.kv_encode(cfg, v.reshape(B, C, -1))
     if bt is not None:

@@ -81,7 +81,8 @@ import numpy as np
 
 from repro.models import api
 from repro.models.config import ModelConfig
-from repro.models.paged import PagedLayout, PageShard, fork_page
+from repro.models.paged import (PagedLayout, PageShard, fork_page,
+                                fused_prefill_span_ok)
 from repro.parallel import sharding
 
 
@@ -244,6 +245,7 @@ class ServingEngine:
                  prefill_chunks_per_step: int = 0,
                  prefix_sharing: Optional[bool] = None,
                  batched_prefill: Optional[bool] = None,
+                 fused_prefill: Optional[bool] = None,
                  mesh=None):
         """batch_slots decode slots over a max_seq position budget per slot.
 
@@ -256,6 +258,11 @@ class ServingEngine:
         per engine step with ongoing decode (chunked prefill inside the
         decode loop).  prefix_sharing / batched_prefill default to the
         QuantPolicy knobs (both on); sharing applies to paged engines only.
+        fused_prefill overrides QuantPolicy.fused_prefill per instance
+        (rewriting cfg.quant before tracing): paged prefill chunks whose
+        page span fits one flash chunk run attention + KV encode + page
+        scatter as ONE device program instead of three, bit-identically —
+        the per-chunk program counts are reported by execution_summary().
 
         mesh: optional jax Mesh.  When the mesh has a >1-sized axis that the
         sharding rules map `kv_pages` onto (the 'model' axis by default),
@@ -271,6 +278,10 @@ class ServingEngine:
         (prefix donors' shards for shared chains) before spilling.
         Dense-cache and SSM-family engines ignore the mesh.
         """
+        if fused_prefill is not None:
+            cfg = dataclasses.replace(
+                cfg, quant=dataclasses.replace(
+                    cfg.quant, fused_prefill=bool(fused_prefill)))
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
@@ -384,7 +395,8 @@ class ServingEngine:
         self._frozen: Dict[int, int] = {}
         self._held: set = set()
         self.stats = {"pages_shared": 0, "shared_admissions": 0,
-                      "cow_forks": 0, "prefill_batch_sizes": {}}
+                      "cow_forks": 0, "prefill_batch_sizes": {},
+                      "prefill_chunks": 0, "prefill_device_programs": 0}
 
         # batch-dim index per cache leaf, for restoring rows of slots that
         # were mid-prefill during a decode call (page pools have no batch
@@ -592,6 +604,9 @@ class ServingEngine:
                                       if self.paged else None),
             "prefix_sharing": self.prefix_sharing,
             "batched_prefill": self.batched_prefill,
+            "fused_prefill": self.paged and bool(q.fused_prefill),
+            "prefill_chunks": self.stats["prefill_chunks"],
+            "prefill_device_programs": self.stats["prefill_device_programs"],
             "pages_shared_mapped": self.pages_shared_mapped,
             "cow_forks": self.stats["cow_forks"],
         }
@@ -1096,6 +1111,17 @@ class ServingEngine:
             self.slot_remaining[slot] = req.max_new_tokens - 1
             self.slot_phase[slot] = _DECODE
 
+    def _prefill_programs_per_chunk(self, size: int) -> int:
+        """Device programs the paged-attention stage of one prefill chunk
+        issues per layer: 1 when the fused kernel applies (attention + KV
+        encode + page scatter collapsed into a single Pallas program),
+        else 3 (flash_attention, kv_encode, insert_chunk)."""
+        if (self.paged and self.cfg.quant.fused_prefill
+                and fused_prefill_span_ok(self.max_pages_per_slot,
+                                          self.layout.page_size, size)):
+            return 1
+        return 3
+
     def _advance_prefill(self, slot: int):
         """Run one prompt chunk for a prefilling slot (per-slot path,
         batched_prefill=False)."""
@@ -1111,6 +1137,9 @@ class ServingEngine:
                                          jnp.int32(slot))
         sizes = self.stats["prefill_batch_sizes"]
         sizes[1] = sizes.get(1, 0) + 1
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_device_programs"] += \
+            self._prefill_programs_per_chunk(size)
         self.slot_cursor[slot] += size
         self.lengths[slot] += size
         self._register_pages(slot)
@@ -1138,6 +1167,9 @@ class ServingEngine:
             self.params, jnp.asarray(tokens), cache_in, jnp.asarray(active))
         sizes = self.stats["prefill_batch_sizes"]
         sizes[len(slots)] = sizes.get(len(slots), 0) + 1
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_device_programs"] += \
+            self._prefill_programs_per_chunk(size)
         for s in slots:
             self.slot_cursor[s] += size
             self.lengths[s] += size

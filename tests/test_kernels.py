@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.formats import P8_2, P13_2, P16_2, PDPUConfig
+from repro.core.formats import P8_2, P13_2, P16_1, P16_2, PDPUConfig
 from repro.kernels import ops, ref
 
 SHAPES_ELTWISE = [(8, 128), (256, 512), (300, 700), (17, 129), (1000,),
@@ -108,3 +108,103 @@ def test_matmul_posit_weights_path(rng):
     got = ops.matmul_posit_weights(x, w_codes, P16_2)
     want = jnp.dot(x, posit.unpack(w_codes, P16_2))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# multi-query paged decode: the 4-D q [B, T, Hq, Dh] grid
+# ---------------------------------------------------------------------------
+
+
+def _mq_setup(seed=1, B=3, T=4, Hq=4, Hkv=2, Dh=8, ps=4, M=5, fmt=P16_1,
+              lengths=(7, 15, 12)):
+    """Coded page pool (valid random codes — recycled-page garbage), one
+    distinct page run per slot, and a [B, T, Hq, Dh] query block.
+    `lengths` count all T new tokens as already written.  A local
+    generator (not the session rng fixture): these tests must not shift
+    the shared stream other test files' draws come from."""
+    rng = np.random.default_rng(seed)
+    n_pages = 1 + B * M
+    F = Hkv * Dh
+    dt = {8: jnp.int8, 16: jnp.int16}[fmt.storage_bits]
+    kp = jnp.asarray(rng.integers(0, 1 << fmt.n, (n_pages, ps, F)), jnp.int32)
+    kp = jnp.where(kp == fmt.nar_code, 0, kp).astype(dt)
+    vp = jnp.asarray(rng.integers(0, 1 << fmt.n, (n_pages, ps, F)), jnp.int32)
+    vp = jnp.where(vp == fmt.nar_code, 0, vp).astype(dt)
+    bt = jnp.asarray(1 + np.arange(B * M).reshape(B, M), jnp.int32)
+    q = jnp.asarray(rng.normal(0, 1, (B, T, Hq, Dh)), jnp.float32)
+    return q, kp, vp, bt, jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("t_block", [1, 2, 4, None])
+def test_paged_attention_mq_matches_ref(t_block):
+    q, kp, vp, bt, lengths = _mq_setup()
+    win = jnp.full((1,), 2 ** 30, jnp.int32)
+    got = ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=P16_1,
+                              softcap_val=20.0, t_block=t_block)
+    want = ref.paged_attention_mq_ref(q, kp, vp, bt, lengths, win,
+                                      fmt_kv=P16_1, softcap_val=20.0)
+    # streaming softmax vs dense softmax over garbage-code magnitudes
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_paged_attention_mq_window_plus_softcap():
+    q, kp, vp, bt, lengths = _mq_setup()
+    win = jnp.full((1,), 5, jnp.int32)
+    got = ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=P16_1,
+                              softcap_val=12.0)
+    want = ref.paged_attention_mq_ref(q, kp, vp, bt, lengths, win,
+                                      fmt_kv=P16_1, softcap_val=12.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_paged_attention_mq_t_block_bitwise_independent():
+    """The query-tile split is the autotuned knob: any tiling must be
+    bitwise identical (each query row's streaming pass is independent)."""
+    q, kp, vp, bt, lengths = _mq_setup()
+    win = jnp.full((1,), 2 ** 30, jnp.int32)
+    outs = [ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=P16_1,
+                                softcap_val=20.0, t_block=tb)
+            for tb in (1, 2, 4)]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(o))
+
+
+def test_paged_attention_mq_t1_matches_3d_path_bitwise():
+    q, kp, vp, bt, lengths = _mq_setup()
+    o3 = ops.paged_attention(q[:, 0], kp, vp, bt, lengths - 3,
+                             jnp.full((1,), 2 ** 30, jnp.int32), fmt_kv=P16_1)
+    o4 = ops.paged_attention(q[:, :1], kp, vp, bt, lengths - 3,
+                             jnp.full((1,), 2 ** 30, jnp.int32), fmt_kv=P16_1)
+    np.testing.assert_array_equal(np.asarray(o3), np.asarray(o4[:, 0]))
+
+
+def test_paged_attention_mq_partials_finalize_matches_direct():
+    """partials=True under the 4-D grid: normalizing (o, m, l) must be
+    bitwise the direct kernel output (the single-'shard' merge case)."""
+    q, kp, vp, bt, lengths = _mq_setup()
+    win = jnp.full((1,), 2 ** 30, jnp.int32)
+    o, m, l = ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=P16_1,
+                                  partials=True)
+    direct = ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=P16_1)
+    norm = o / jnp.maximum(l, 1e-30)[..., None]
+    np.testing.assert_array_equal(np.asarray(norm), np.asarray(direct))
+
+
+def test_paged_attention_mq_zero_length_slot():
+    """A slot with length 0 has every kv position masked: the streaming
+    kernel's normalizer stays 0 and finalize yields exact finite zeros
+    (NOT the dense reference's uniform softmax over -inf rows).  The
+    other slots must still match the reference."""
+    q, kp, vp, bt, lengths = _mq_setup(lengths=(7, 15, 0))
+    win = jnp.full((1,), 2 ** 30, jnp.int32)
+    got = ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=P16_1,
+                              softcap_val=20.0)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_array_equal(np.asarray(got[2]),
+                                  np.zeros_like(np.asarray(got[2])))
+    want = ref.paged_attention_mq_ref(q, kp, vp, bt, lengths, win,
+                                      fmt_kv=P16_1, softcap_val=20.0)
+    np.testing.assert_allclose(np.asarray(got[:2]), np.asarray(want[:2]),
+                               rtol=2e-5, atol=1e-5)

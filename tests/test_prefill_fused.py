@@ -1,0 +1,266 @@
+"""Fused prefill-attention-that-writes-pages: kernel parity + engine wiring.
+
+The fused kernel (kernels/prefill_attention.py, behind
+ops.prefill_attention_paged) collapses the prefill chunk's three device
+programs — flash attention over history+chunk, posit-encode of the chunk
+KV, scatter into pool pages via the block table — into one.  These tests
+pin the contract that makes it a pure perf move:
+
+  * bit-identical attention output AND bit-identical written pages vs the
+    decomposed gather -> decode -> flash -> encode -> insert composite,
+    across KV formats (f32 pool, P(16,1), P(8,2)), compute dtypes,
+    mid-page starts, window+softcap, per-slot vs batched launches, and
+    the sharded dense-history variant (hist_k/hist_v + page_ok masks);
+  * the static applicability gate (paged.fused_prefill_span_ok) stays in
+    sync with the flash kernel's chunk size, so fusion never changes the
+    chunking the legacy path would have used;
+  * ServingEngine(fused_prefill=...) emits token-identical streams either
+    way while the prefill_device_programs counter drops 3x -> 1x.
+"""
+import inspect
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.core import posit
+from repro.core.formats import P8_2, P16_1, P16_2
+from repro.core.quant import QuantPolicy
+from repro.kernels import ops
+from repro.models import api, common, paged
+from repro.serve import Request, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# kernel parity vs the decomposed three-program path
+# ---------------------------------------------------------------------------
+
+
+def _legacy(q, k, v, k_pool, v_pool, bt, starts, win, fmt, compute_dtype,
+            softcap_val):
+    """Replay _chunk_attn_batched's decomposed attention+encode+insert
+    stages op-for-op (the exact programs the fused kernel replaces)."""
+    B, C, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+
+    def kv_encode(x):
+        return x.astype(compute_dtype) if fmt is None else posit.pack(x, fmt)
+
+    def kv_decode(x):
+        return x if fmt is None else posit.unpack(x, fmt, dtype=compute_dtype)
+
+    k_codes = kv_encode(k.reshape(B, C, -1))
+    v_codes = kv_encode(v.reshape(B, C, -1))
+    hist_k = paged.gather_slots(k_pool, bt)
+    hist_v = paged.gather_slots(v_pool, bt)
+    k_new = paged.insert_chunk_batched(k_pool, bt, starts, k_codes)
+    v_new = paged.insert_chunk_batched(v_pool, bt, starts, v_codes)
+    S_h = hist_k.shape[1]
+    hist_pos = jnp.broadcast_to(jnp.arange(S_h, dtype=jnp.int32)[None],
+                                (B, S_h))
+    hist_pos = jnp.where(hist_pos < starts[:, None], hist_pos, -1)
+    pos = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    kd = kv_decode(hist_k).reshape(B, S_h, Hkv, Dh).astype(k.dtype)
+    vd = kv_decode(hist_v).reshape(B, S_h, Hkv, Dh).astype(v.dtype)
+    k_all = jnp.concatenate([kd, k], axis=1)
+    v_all = jnp.concatenate([vd, v], axis=1)
+    kv_pos = jnp.concatenate([hist_pos, pos], axis=1)
+    window = None if win is None else jnp.int32(win)
+    attn = common.flash_attention(q, k_all, v_all, pos, kv_pos, causal=True,
+                                  window=window, softcap_val=softcap_val)
+    return attn, k_new, v_new
+
+
+def _pool(rng, fmt, n_pages, ps, F, compute_dtype):
+    """A recycled page pool: valid posit codes (or floats) as garbage."""
+    if fmt is None:
+        return jnp.asarray(rng.normal(0, 1, (n_pages, ps, F)), compute_dtype)
+    dt = {8: jnp.int8, 16: jnp.int16}[fmt.storage_bits]
+    raw = jnp.asarray(rng.integers(0, 1 << fmt.n, (n_pages, ps, F)),
+                      jnp.int32)
+    return jnp.where(raw == fmt.nar_code, 0, raw).astype(dt)
+
+
+# (fmt, compute_dtype, B, C, window, softcap, starts, per_slot, dense_hist)
+_CASES = {
+    "coded_start0": (P16_1, jnp.float32, 1, 8, None, 0.0, [0], False, False),
+    "coded_mixed_midpage_starts":
+        (P16_1, jnp.float32, 3, 8, None, 0.0, [0, 5, 13], False, False),
+    "window_plus_softcap":
+        (P16_1, jnp.float32, 2, 8, 7, 30.0, [4, 9], False, False),
+    "f32_pool": (None, jnp.float32, 2, 8, None, 0.0, [3, 0], False, False),
+    "bf16_compute":
+        (P16_1, jnp.bfloat16, 2, 8, None, 0.0, [2, 7], False, False),
+    "p8_kv": (P8_2, jnp.float32, 2, 8, None, 0.0, [1, 6], False, False),
+    "per_slot_eq_batched":
+        (P16_1, jnp.float32, 2, 8, None, 0.0, [0, 5], True, False),
+    "dense_hist_sharded_variant":
+        (P16_1, jnp.float32, 2, 8, 5, 10.0, [4, 9], False, True),
+    "single_token_chunk":
+        (P16_1, jnp.float32, 2, 1, None, 0.0, [7, 0], False, False),
+}
+
+
+@pytest.mark.parametrize("name", sorted(_CASES))
+def test_fused_prefill_bitwise_vs_decomposed(name):
+    rng = np.random.default_rng(0)
+    fmt, compute_dtype, B, C, win, softcap, starts_l, per_slot, dense = \
+        _CASES[name]
+    Hq, Hkv, Dh, ps, M = 4, 2, 8, 4, 6
+    F = Hkv * Dh
+    n_pages = 1 + B * M
+    pool_k = _pool(rng, fmt, n_pages, ps, F, compute_dtype)
+    pool_v = _pool(rng, fmt, n_pages, ps, F, compute_dtype)
+    bt = np.zeros((B, M), np.int32)
+    for b in range(B):
+        alloc = -(-(int(starts_l[b]) + C) // ps)
+        bt[b, :alloc] = 1 + b * M + np.arange(alloc)
+    bt = jnp.asarray(bt)
+    starts = jnp.asarray(starts_l, jnp.int32)
+    q = jnp.asarray(rng.normal(0, 1, (B, C, Hq, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+
+    ref_attn, ref_k, ref_v = _legacy(q, k, v, pool_k, pool_v, bt, starts,
+                                     win, fmt, compute_dtype, softcap)
+    win_arr = jnp.full((1,), 2 ** 30 if win is None else win, jnp.int32)
+    kw = {}
+    if dense:
+        kw = dict(hist_k=paged.gather_slots(pool_k, bt),
+                  hist_v=paged.gather_slots(pool_v, bt))
+    if per_slot:
+        attn = jnp.zeros_like(ref_attn)
+        k_new, v_new = pool_k, pool_v
+        for b in range(B):
+            a1, k_new, v_new = ops.prefill_attention_paged(
+                q[b:b + 1], k[b:b + 1], v[b:b + 1], k_new, v_new,
+                bt[b:b + 1], starts[b:b + 1], win_arr, fmt_kv=fmt,
+                compute_dtype=compute_dtype, softcap_val=softcap)
+            attn = attn.at[b].set(a1[0])
+    else:
+        attn, k_new, v_new = ops.prefill_attention_paged(
+            q, k, v, pool_k, pool_v, bt, starts, win_arr, fmt_kv=fmt,
+            compute_dtype=compute_dtype, softcap_val=softcap, **kw)
+
+    np.testing.assert_array_equal(np.asarray(attn), np.asarray(ref_attn))
+    # page 0 is the trash page (unowned writes land there) — exclude it
+    np.testing.assert_array_equal(np.asarray(k_new[1:]), np.asarray(ref_k[1:]))
+    np.testing.assert_array_equal(np.asarray(v_new[1:]), np.asarray(ref_v[1:]))
+
+
+def test_fused_prefill_page_ok_masks_writes():
+    """With page_ok masking out a slot's pages (the not-my-shard case),
+    the fused kernel must leave those pool pages untouched and still
+    produce the full attention output from the dense history."""
+    rng = np.random.default_rng(1)
+    B, C, Hq, Hkv, Dh, ps, M = 2, 8, 4, 2, 8, 4, 6
+    F = Hkv * Dh
+    fmt = P16_1
+    pool_k = _pool(rng, fmt, 1 + B * M, ps, F, jnp.float32)
+    pool_v = _pool(rng, fmt, 1 + B * M, ps, F, jnp.float32)
+    bt = np.zeros((B, M), np.int32)
+    starts_l = [4, 9]
+    for b in range(B):
+        alloc = -(-(starts_l[b] + C) // ps)
+        bt[b, :alloc] = 1 + b * M + np.arange(alloc)
+    bt = jnp.asarray(bt)
+    starts = jnp.asarray(starts_l, jnp.int32)
+    q = jnp.asarray(rng.normal(0, 1, (B, C, Hq, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+    win_arr = jnp.full((1,), 2 ** 30, jnp.int32)
+    hk, hv = paged.gather_slots(pool_k, bt), paged.gather_slots(pool_v, bt)
+    owned = jnp.zeros_like(bt).at[0].set(1)  # shard owns slot 0's pages only
+
+    full_attn, full_k, full_v = ops.prefill_attention_paged(
+        q, k, v, pool_k, pool_v, bt, starts, win_arr, fmt_kv=fmt,
+        hist_k=hk, hist_v=hv)
+    attn, k_new, v_new = ops.prefill_attention_paged(
+        q, k, v, pool_k, pool_v, bt, starts, win_arr, fmt_kv=fmt,
+        hist_k=hk, hist_v=hv, page_ok=owned)
+
+    np.testing.assert_array_equal(np.asarray(attn), np.asarray(full_attn))
+    own = np.asarray(bt[0])[np.asarray(bt[0]) > 0]
+    other = np.asarray(bt[1])[np.asarray(bt[1]) > 0]
+    np.testing.assert_array_equal(np.asarray(k_new[own]),
+                                  np.asarray(full_k[own]))
+    np.testing.assert_array_equal(np.asarray(k_new[other]),
+                                  np.asarray(pool_k[other]))
+    np.testing.assert_array_equal(np.asarray(v_new[other]),
+                                  np.asarray(pool_v[other]))
+
+
+# ---------------------------------------------------------------------------
+# the static applicability gate
+# ---------------------------------------------------------------------------
+
+
+def test_span_gate_matches_flash_chunk():
+    """fused_prefill_span_ok is only sound while paged.FLASH_CHUNK equals
+    the flash kernel's default chunk_k: the fused kernel replays the
+    single-chunk flash pass, so a chunk_k change must bump FLASH_CHUNK."""
+    sig = inspect.signature(common.flash_attention)
+    assert sig.parameters["chunk_k"].default == paged.FLASH_CHUNK == 1024
+
+
+def test_span_gate_boundaries():
+    assert paged.fused_prefill_span_ok(6, 4, 8)          # 24 + 8 <= 1024
+    assert paged.fused_prefill_span_ok(63, 16, 16)       # 1008 + 16 == 1024
+    assert not paged.fused_prefill_span_ok(63, 16, 17)   # one past the chunk
+    assert not paged.fused_prefill_span_ok(128, 16, 64)  # multi-chunk span
+
+
+# ---------------------------------------------------------------------------
+# engine: fused on/off token parity + the 3x -> 1x program counter
+# ---------------------------------------------------------------------------
+
+_ARCHS = {"transformer": "command_r_35b",
+          "moe": "qwen3_moe_235b",
+          "hybrid": "jamba_1_5_large"}
+_QUANTS = {"f32": QuantPolicy(),
+           "coded": QuantPolicy(weights=P16_2, kv_cache=P8_2)}
+
+
+def _serve(cfg, params, prompts, fused):
+    engine = ServingEngine(cfg, params, batch_slots=2, max_seq=32,
+                           fused_prefill=fused)
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+    done = engine.run()
+    return {r.rid: r.out_tokens for r in done}, engine
+
+
+@pytest.mark.parametrize("family", sorted(_ARCHS))
+@pytest.mark.parametrize("qname", sorted(_QUANTS))
+def test_engine_token_parity_fused_vs_decomposed(family, qname):
+    rng = np.random.default_rng(2)
+    cfg = configs.get_tiny_serving(_ARCHS[family], _QUANTS[qname])
+    params = api.init(jax.random.key(0), cfg)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (9, 6)]
+    out_f, eng_f = _serve(cfg, params, prompts, fused=True)
+    out_d, eng_d = _serve(cfg, params, prompts, fused=False)
+    assert out_f == out_d
+    sf, sd = eng_f.execution_summary(), eng_d.execution_summary()
+    assert sf["fused_prefill"] and not sd["fused_prefill"]
+    # same chunk schedule either way, but 1 vs 3 device programs per chunk
+    assert sf["prefill_chunks"] == sd["prefill_chunks"] > 0
+    assert sf["prefill_device_programs"] == sf["prefill_chunks"]
+    assert sd["prefill_device_programs"] == 3 * sd["prefill_chunks"]
+
+
+def test_engine_counter_follows_span_gate():
+    cfg = configs.get_tiny_serving("command_r_35b",
+                                   QuantPolicy(kv_cache=P16_1))
+    params = api.init(jax.random.key(0), cfg)
+    engine = ServingEngine(cfg, params, batch_slots=1, max_seq=32)
+    assert engine.cfg.quant.fused_prefill  # the default
+    span_ok = paged.fused_prefill_span_ok(engine.max_pages_per_slot,
+                                          engine.layout.page_size, 8)
+    assert engine._prefill_programs_per_chunk(8) == (1 if span_ok else 3)
+    decomposed = ServingEngine(cfg, params, batch_slots=1, max_seq=32,
+                               fused_prefill=False)
+    assert not decomposed.cfg.quant.fused_prefill
+    assert decomposed._prefill_programs_per_chunk(8) == 3

@@ -427,3 +427,94 @@ def test_mesh_engine_reclaims_after_oversubscribed_drain():
         print("DRAIN-OK")
     """)
     assert "DRAIN-OK" in out
+
+
+# ---------------------------------------------------------------------------
+# multi-query (4-D q) partials merge + the fused sharded prefill path
+# ---------------------------------------------------------------------------
+
+
+def test_merge_partials_matches_full_kernel_mq():
+    """The owner-split log-sum-exp merge under the multi-query grid:
+    complementary page_ok masks over 4-D q [B, T, Hq, Dh] must merge to
+    the full-kernel output, bitwise for slots whose pages all live on
+    one owner — the decode-side guarantee the sharded engine leans on
+    when several new tokens per slot decode in one launch."""
+    rng = np.random.default_rng(0)
+    B, T, Hq, Hkv, Dh, ps, M = 3, 4, 2, 1, 4, 4, 4
+    n_pages = 8
+    k = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv * Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv * Dh)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, T, Hq, Dh)), jnp.float32)
+    bt = jnp.asarray([[1, 2, 3, 0],     # split across both owners
+                      [4, 5, 0, 0],     # entirely owner-1 pages
+                      [6, 7, 1, 2]], jnp.int32)
+    lengths = jnp.asarray([11, 6, 15], jnp.int32)
+    window = jnp.full((B,), 1 << 30, jnp.int32)
+
+    full = ops.paged_attention(q, k, v, bt, lengths, window)
+
+    own0 = jnp.asarray(np.isin(np.asarray(bt), [1, 2, 3]), jnp.int32)
+    own1 = jnp.asarray(np.isin(np.asarray(bt), [4, 5, 6, 7]), jnp.int32)
+    parts = [ops.paged_attention(q, k, v, bt, lengths, window,
+                                 page_ok=ok, partials=True)
+             for ok in (own0, own1)]
+    o = jnp.stack([p[0] for p in parts])
+    m = jnp.stack([p[1] for p in parts])
+    l = jnp.stack([p[2] for p in parts])
+    merged = jax.vmap(lambda oo, mm, ll:
+                      ops.merge_attn_partials(oo, mm, ll, "owners"),
+                      axis_name="owners")(o, m, l)
+    np.testing.assert_allclose(np.asarray(merged[0]), np.asarray(full),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(merged[0][1]),
+                                  np.asarray(full[1]))
+
+
+def test_mesh_engine_fused_prefill_slot_spanning_all_shards():
+    """One long prompt whose pages land on every shard, prefilled through
+    the fused dense-history kernel (the default): the 2-device stream
+    must be token-identical to the 1-device engine running the
+    *decomposed* prefill path — crossing both the fused/decomposed and
+    the sharded/unsharded boundaries at once — and the slot's pages must
+    actually occupy both shards mid-flight."""
+    out = _run("""
+        import jax, numpy as np
+        from repro import configs
+        from repro.core.formats import P8_2, P16_2
+        from repro.core.quant import QuantPolicy
+        from repro.models import api
+        from repro.serve import Request, ServingEngine
+        from repro.launch.mesh import make_serving_mesh
+
+        cfg = configs.get_tiny_serving(
+            "command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P8_2))
+        params = api.init(jax.random.key(0), cfg)
+        ps = cfg.quant.kv_page_size
+        rng = np.random.default_rng(7)
+        # spans > pages_per_shard pages, so one slot must spill shards
+        prompt = rng.integers(0, cfg.vocab_size, 5 * ps + 3).astype(np.int32)
+
+        def run(mesh, fused):
+            eng = ServingEngine(cfg, params, batch_slots=1,
+                                max_seq=8 * ps, n_pages=12, mesh=mesh,
+                                fused_prefill=fused)
+            eng.submit(Request(rid=0, prompt=prompt.copy(),
+                               max_new_tokens=4))
+            while eng.pages_in_use == 0:
+                eng.step()
+            by_shard = eng.allocator.pages_in_use_by_shard
+            done = eng.run()
+            assert len(done) == 1
+            return list(done[0].out_tokens), by_shard, eng
+
+        ref_toks, _, e1 = run(None, fused=False)
+        got_toks, by_shard, e2 = run(make_serving_mesh(2), fused=True)
+        assert e2.cfg.quant.fused_prefill
+        assert e2.execution_summary()["fused_prefill"]
+        assert len(by_shard) == 2 and all(n > 0 for n in by_shard), by_shard
+        assert got_toks == ref_toks, (got_toks, ref_toks)
+        assert e2.allocator.pages_in_use == 0
+        print("SPAN-OK", by_shard)
+    """)
+    assert "SPAN-OK" in out
