@@ -192,6 +192,53 @@ def bench_fused_prefill(rng):
     }
 
 
+def bench_serving_programs():
+    """Serving-structural launch counts on a real engine run with a long
+    prompt (> 3 flash chunks, so fused prefill streams history): device
+    programs per prefill chunk and per decode step.  Both ratios are
+    work-units-per-program — 1.0 when every chunk / step is a single
+    fused device program (the gated target), < 1 on any fallback."""
+    from repro import configs
+    from repro.core.quant import QuantPolicy
+    from repro.models import api
+    from repro.serve.engine import Request, ServingEngine
+
+    q = QuantPolicy(weights=P16_2, kv_cache=P8_2, execution="fused")
+    cfg = configs.get_tiny_serving("command_r_35b", q)
+    params = api.init(jax.random.key(0), cfg)
+    orig_chunk = paged.FLASH_CHUNK
+    paged.FLASH_CHUNK = 16  # page size 16 divides it: fused span gate holds
+    try:
+        rng = np.random.default_rng(5)
+        prompt = [int(t) for t in
+                  rng.integers(0, cfg.vocab_size, 3 * paged.FLASH_CHUNK + 5)]
+        eng = ServingEngine(cfg, params, batch_slots=2, max_seq=64,
+                            greedy=True, base_seed=7)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+        eng.submit(Request(rid=1, prompt=prompt[:9], max_new_tokens=4))
+        done = eng.run()
+        summ = eng.execution_summary()
+    finally:
+        paged.FLASH_CHUNK = orig_chunk
+    chunks = summ["prefill_chunks"]
+    p_progs = summ["prefill_device_programs"]
+    steps = summ["decode_steps"]
+    d_progs = summ["decode_device_programs"]
+    return {
+        "prompt_tokens": len(prompt), "flash_chunk": 16,
+        "completed": len(done),
+        "prefill_chunks": chunks,
+        "prefill_device_programs": p_progs,
+        "decode_steps": steps,
+        "decode_device_programs": d_progs,
+        # structural: 1.0 = every prefill chunk / decode step is ONE program
+        "prefill_chunks_per_device_program": chunks / p_progs,
+        "decode_steps_per_device_program": steps / d_progs,
+        "long_prefill_fully_fused": p_progs == chunks,
+        "decode_single_program": d_progs == steps and summ["fused_decode"],
+    }
+
+
 def main():
     rng = np.random.default_rng(0)
     print("kernel,us_per_call_cpu_interpret,us_per_call_tpu_roofline")
@@ -213,6 +260,14 @@ def main():
           f"fused {prefill['fused_ms']:.1f} ms per chunk; "
           f"bit identical: {prefill['fused_bit_identical']}")
 
+    serving = bench_serving_programs()
+    print(f"serving: {serving['prompt_tokens']}-token prompt over "
+          f"flash_chunk={serving['flash_chunk']} — "
+          f"{serving['prefill_chunks']} prefill chunks / "
+          f"{serving['prefill_device_programs']} programs, "
+          f"{serving['decode_steps']} decode steps / "
+          f"{serving['decode_device_programs']} programs")
+
     tuned = autotune.hit_report()
     n_entries = len(autotune.get_cache().entries)
     print(f"autotune: {n_entries} cache entries; hits/misses: {tuned}")
@@ -220,6 +275,8 @@ def main():
     checks = {
         "mq_matches_single_token": decode["mq_matches_single_token"],
         "fused_prefill_bit_identical": prefill["fused_bit_identical"],
+        "long_prefill_fully_fused": serving["long_prefill_fully_fused"],
+        "decode_single_program": serving["decode_single_program"],
         "autotune_cache_loaded": n_entries > 0,
     }
     payload = {
@@ -227,6 +284,7 @@ def main():
                     for n, u, t in kernel_rows],
         "decode": decode,
         "prefill": prefill,
+        "serving": serving,
         "autotune": {"entries": n_entries, "report": tuned},
         # the CI perf gate compares these (>10% regression fails); they
         # are structural ratios, deterministic on any host
@@ -235,6 +293,12 @@ def main():
                 decode["launches_per_token_ratio"],
             "prefill_programs_per_chunk_ratio":
                 prefill["programs_per_chunk_ratio"],
+            # 1.0 = every long-prompt prefill chunk is ONE fused program
+            "prefill_chunks_per_device_program":
+                serving["prefill_chunks_per_device_program"],
+            # 1.0 = every decode step is ONE program (fused epilogue)
+            "decode_steps_per_device_program":
+                serving["decode_steps_per_device_program"],
         },
         "checks": checks,
     }

@@ -76,6 +76,16 @@ def gate_one(name: str, base: dict, fresh: dict):
         if direction == "lower" and got > want * (1 + TOLERANCE):
             fails.append(f"metric '{path}': {got:.4g} > "
                          f"{want:.4g} + {TOLERANCE:.0%}")
+    # a gated ratio the fresh bench emits but the baseline doesn't know
+    # about is a silent coverage hole: the new metric would never be
+    # compared.  Fail by name until the baseline is regenerated.
+    base_gated = set(base.get("gated") or {})
+    for key in sorted(fresh.get("gated") or {}):
+        if key not in base_gated:
+            fails.append(
+                f"gated metric 'gated.{key}' emitted by the fresh bench but "
+                f"missing from the committed baseline BENCH_{name}.json — "
+                f"regenerate and recommit the baseline so it is gated")
     return fails
 
 

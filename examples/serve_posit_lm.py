@@ -106,10 +106,19 @@ with tempfile.TemporaryDirectory() as ckpt_dir:
           f"{sum(batches.values())} device calls "
           f"(batch-size histogram {dict(sorted(batches.items()))})")
     summ = engine.execution_summary()
+    # each chunk group ran as 1 program (fused) or 3 (decomposed
+    # fallback), so the counter pair recovers the per-chunk coverage
+    n_pc, n_pp = summ["prefill_chunks"], summ["prefill_device_programs"]
+    n_fused = (3 * n_pc - n_pp) // 2
     print(f"fused prefill: {'on' if summ['fused_prefill'] else 'off'} — "
-          f"{summ['prefill_device_programs']} attention-stage device "
-          f"programs for {summ['prefill_chunks']} chunk groups "
-          f"(1/chunk fused, 3/chunk decomposed)")
+          f"{n_pp} attention-stage device programs for {n_pc} chunk "
+          f"groups: {n_fused} fused (1 program) / {n_pc - n_fused} "
+          f"fallback (3 programs)")
+    n_ds, n_dp = summ["decode_steps"], summ["decode_device_programs"]
+    print(f"fused decode: {'on' if summ['fused_decode'] else 'off'} — "
+          f"{n_dp / max(n_ds, 1):.1f} device programs per decode step "
+          f"({n_dp} programs / {n_ds} steps; 1 fused = model+head+sampler "
+          f"in one dispatch, 2 decomposed)")
     tuned = autotune.hit_report()
     print(f"autotune cache: {len(autotune.get_cache().entries)} entries; "
           f"tuned-config hits/misses this run: {tuned or 'none'}")

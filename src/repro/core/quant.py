@@ -111,9 +111,18 @@ class QuantPolicy:
                   chunk attention + posit KV encode + page scatter in ONE
                   device program instead of three (flash_attention,
                   kv_encode, insert_chunk).  Bit-identical to the
-                  decomposed path; applies only when the slot's page span
-                  fits one flash chunk (paged.fused_prefill_span_ok),
-                  otherwise the decomposed path runs for that layout.
+                  decomposed path for arbitrary spans — history beyond one
+                  flash chunk streams through the kernel's running flash
+                  softmax page-by-page; only a page size that does not
+                  divide `paged.FLASH_CHUNK` still forces the decomposed
+                  fallback (paged.fused_prefill_span_ok).
+    fused_decode : serving-kernel knob — each paged decode step runs
+                  attention + logits-head GEMM + sampling epilogue as ONE
+                  device program (common.sample_head /
+                  kernels ops.decode_sample) instead of a decode dispatch
+                  followed by a sampler dispatch.  Bit-identical tokens;
+                  bit_exact execution keeps the decomposed pair (its head
+                  GEMM has no fused replay).
     pdpu_n, pdpu_w_m : chunk size and alignment width of the PDPU instance
                   used by the 'bit_exact' plan (paper Table I knobs).
     """
@@ -128,6 +137,7 @@ class QuantPolicy:
     prefix_sharing: bool = True
     batched_prefill: bool = True
     fused_prefill: bool = True
+    fused_decode: bool = True
     pdpu_n: int = 4
     pdpu_w_m: int = 14
 

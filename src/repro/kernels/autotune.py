@@ -138,6 +138,15 @@ TUNABLES = {
     "posit_matmul_grouped": {"bm": (128, 256), "bn": (128, 256),
                              "bk": (256, 512)},
     "paged_attention": {"t_block": (1, 2, 4, 8)},
+    # fused prefill: TPU launch knobs — whether the batch grid dim may run
+    # as a parallel (multi-core) dimension, and the Mosaic VMEM budget
+    # (None = compiler default).  Neither changes the computed values.
+    "prefill_attention": {"dimension_semantics": ("parallel", "arbitrary"),
+                          "vmem_limit_mb": (None, 64, 128)},
+    # fused decode epilogue: vocab tile width of the streamed logits GEMM +
+    # sampler.  0 collapses the vocab grid dimension (whole vocab in one
+    # step); any tiling is bitwise identical (rows stay whole).
+    "decode_sample": {"v_block": (0, 512, 1024, 2048)},
 }
 
 
@@ -199,6 +208,26 @@ def oracle_cost(kernel: str, shape, params: dict, fmts=()) -> float:
         # every (slot, q-tile) sweep re-reads the slot's pages
         bytes_ = B * (tp // tb) * M * ps * F * elt_bytes(0) * 2
         flops = 4.0 * B * tp * M * ps * F
+    elif kernel == "prefill_attention":
+        # launch knobs (dimension_semantics / VMEM budget) don't change the
+        # computed volume — every candidate shares the roofline estimate and
+        # all survive pruning into the wall-clock timing stage.
+        B, C, M, ps, F = shape
+        S = M * ps + C  # worst case: full history + the chunk itself
+        bytes_ = B * (C * F * 4 * 3                  # q/k/v chunk reads
+                      + M * ps * F * elt_bytes(0) * 2  # history pages (k+v)
+                      + C * F * elt_bytes(0) * 2       # encoded page writes
+                      + C * F * 4)                     # attention output
+        flops = 4.0 * B * C * S * F
+    elif kernel == "decode_sample":
+        B, D, V = shape
+        vb = params["v_block"] or V  # 0 = whole vocab (collapsed grid)
+        vp = _pad_up(V, vb)
+        # head weights streamed once; x re-read per vocab tile; noise +
+        # logits epilogue at f32
+        bytes_ = (D * vp * elt_bytes(0)
+                  + (vp // min(vb, V)) * B * D * 4 + 2 * B * vp * 4)
+        flops = 2.0 * B * D * vp + 8.0 * B * vp
     else:
         raise KeyError(f"no oracle for kernel '{kernel}'")
     return max(flops / HW["peak_flops_bf16"], bytes_ / HW["hbm_bw"])

@@ -53,6 +53,14 @@ def _resolve(kernel: str, shape, fmts, kw: dict, names) -> dict:
     return kw
 
 
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (>= 1)."""
+    for d in range(min(int(cap), int(n)), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
 def _flat2d(shape):
     """The codec kernels collapse leading dims: lookup on the (R, C) the
     kernel actually launches."""
@@ -144,7 +152,10 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
              k_pages.shape[1], k_pages.shape[2]),
             (fmt_kv,), {}, ("t_block",))
         tb = kw.get("t_block")
-        t_block = tb if tb is not None and q.shape[1] % tb == 0 else None
+        # a cached t_block that doesn't divide this launch's T degrades to
+        # the largest divisor of T below it (any tiling is value-neutral),
+        # rather than dropping to untiled
+        t_block = _largest_divisor(q.shape[1], tb) if tb is not None else None
     return paged_attention_mod.paged_attention(
         q, k_pages, v_pages, block_tables, lengths, window,
         fmt_kv=fmt_kv, softcap_val=softcap_val, interpret=_interpret(),
@@ -154,20 +165,54 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
 def prefill_attention_paged(q, k, v, k_pages, v_pages, block_tables, starts,
                             window, fmt_kv: PositFormat | None = None,
                             compute_dtype=jnp.float32,
-                            softcap_val: float = 0.0, hist_k=None,
-                            hist_v=None, page_ok=None):
+                            softcap_val: float = 0.0, flash_chunk: int = 1024,
+                            hist_pool_k=None, hist_pool_v=None, hist_bt=None,
+                            page_ok=None, **kw):
     """Fused prefill: chunk attention + posit KV encode + page insert in a
     single device program (kernels/prefill_attention.py) — bit-identical
     to the decomposed flash_attention -> kv_encode -> insert_chunk path
-    for spans within one flash chunk (`paged.fused_prefill_span_ok`).
+    for any span admitted by `paged.fused_prefill_span_ok` (history beyond
+    one flash chunk streams through the kernel's running flash softmax).
 
-    Sharded pools pass the psum-gathered history (hist_k/hist_v), the
-    localized block tables, and their ownership mask as page_ok."""
+    Sharded pools pass the all-gathered global pool (hist_pool_k/v), the
+    global block tables as hist_bt, the localized block tables, and their
+    ownership mask as page_ok."""
+    kw = _resolve("prefill_attention",
+                  (q.shape[0], q.shape[1], block_tables.shape[1],
+                   k_pages.shape[1], k_pages.shape[2]),
+                  (fmt_kv,), kw, ("dimension_semantics", "vmem_limit_mb"))
     return prefill_attention_mod.prefill_attention_paged(
         q, k, v, k_pages, v_pages, block_tables, starts, window,
         fmt_kv=fmt_kv, compute_dtype=compute_dtype, softcap_val=softcap_val,
-        interpret=_interpret(), hist_k=hist_k, hist_v=hist_v,
-        page_ok=page_ok)
+        flash_chunk=flash_chunk, interpret=_interpret(),
+        hist_pool_k=hist_pool_k, hist_pool_v=hist_pool_v, hist_bt=hist_bt,
+        page_ok=page_ok, **kw)
+
+
+def decode_sample(x, w, noise=None, temperature=None, *, plan: str = "fused",
+                  fmt_w: PositFormat | None = None, transpose: bool = False,
+                  greedy: bool = False, top_k: int = 0,
+                  softcap_val: float = 0.0, v_block: int | None = None):
+    """One-program decode epilogue: logits-head GEMM + sampling fused.
+
+    Streams the head weights through the sampler in vocab tiles
+    (kernels/paged_attention.py:decode_sample) so a decode step's logits
+    never round-trip through HBM — bit-identical to running `logits_head`
+    and the engine sampler as separate device programs.  `v_block` resolves
+    through the autotune cache (0 = whole vocab / collapsed grid); a cached
+    tile that doesn't divide this vocab degrades to the largest divisor
+    below it, like `paged_attention`'s t_block."""
+    V = w.shape[0] if transpose else w.shape[1]
+    if v_block is None:
+        kw = _resolve("decode_sample", (x.shape[0], x.shape[1], V),
+                      (fmt_w,), {}, ("v_block",))
+        vb = kw.get("v_block")
+        if vb is not None:
+            v_block = V if vb == 0 else _largest_divisor(V, vb)
+    return paged_attention_mod.decode_sample(
+        x, w, noise, temperature, plan=plan, fmt_w=fmt_w,
+        transpose=transpose, greedy=greedy, top_k=top_k,
+        softcap_val=softcap_val, v_block=v_block, interpret=_interpret())
 
 
 def merge_attn_partials(o, m, l, axis_name: str):

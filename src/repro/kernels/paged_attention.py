@@ -360,3 +360,191 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       window.astype(jnp.int32), page_ok.astype(jnp.int32),
       q.astype(jnp.float32), k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# fused decode epilogue: logits-head posit GEMM + sampling in one program
+# ---------------------------------------------------------------------------
+
+
+def _decode_sample_kernel(x_ref, w_ref, *refs, plan: str,
+                          fmt_w: PositFormat | None, transpose: bool,
+                          greedy: bool, top_k: int, softcap_val: float,
+                          v_block: int, n_vt: int, n_phase: int):
+    if greedy:
+        t_ref, tok_ref, *scr = refs
+        noise_ref = None
+    else:
+        noise_ref, t_ref, tok_ref, *scr = refs
+    if n_phase == 2:
+        best_scr, idx_scr, kbuf_scr = scr
+    else:
+        best_scr, idx_scr = scr
+        kbuf_scr = None
+    ph = pl.program_id(0)
+    t = pl.program_id(1)
+
+    def _logits():
+        # replay logits_head's qdot plan on this vocab tile, op-for-op
+        w = w_ref[...]
+        if transpose:
+            w = w.T  # pure relayout: commutes with the elementwise decode
+        if fmt_w is not None:
+            wq = posit.decode(w.astype(jnp.int32) & fmt_w.mask, fmt_w)
+        else:
+            wq = w
+        x = x_ref[...]
+        if plan == "fused":
+            # ops.matmul_posit_weights: f32 activations x exact f32 decode
+            l = jnp.dot(x.astype(jnp.float32), wq,
+                        preferred_element_type=jnp.float32)
+        else:
+            # fake_quant: unpack to x.dtype, dot in x.dtype, f32 output
+            l = jnp.dot(x, wq.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+        return _softcap(l.astype(jnp.float32), softcap_val)
+
+    def _scaled():
+        return _logits() / jnp.maximum(t_ref[0], 1e-6)
+
+    if n_phase == 2:
+        # phase 0: stream the per-row top-k values into kbuf so the argmax
+        # phase can read the exact k-th largest (== sort(l)[..., -top_k])
+        @pl.when(ph == 0)
+        def _topk():
+            l = _scaled()
+
+            @pl.when(t == 0)
+            def _init_kbuf():
+                kbuf_scr[...] = jnp.full_like(kbuf_scr, -jnp.inf)
+
+            cand = jnp.concatenate([kbuf_scr[...], l], axis=1)
+            cols = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 1)
+            tops = []
+            for _ in range(top_k):
+                mx = jnp.max(cand, axis=1)
+                first = jnp.argmax(cand, axis=1).astype(jnp.int32)
+                tops.append(mx)
+                # retire one instance so repeated values keep multiset
+                # semantics, exactly like a sort
+                cand = jnp.where(cols == first[:, None], -jnp.inf, cand)
+            kbuf_scr[...] = jnp.stack(tops, axis=1)
+
+    @pl.when(ph == n_phase - 1)
+    def _argmax():
+        if greedy:
+            y = _logits()  # greedy samples the raw (softcapped) logits
+        else:
+            l = _scaled()
+            if kbuf_scr is not None:
+                kth = kbuf_scr[...][:, top_k - 1]
+                l = jnp.where(l >= kth[:, None], l, -1e30)
+            # categorical(key, l) == argmax(gumbel_noise + l)
+            y = noise_ref[...] + l
+
+        @pl.when(t == 0)
+        def _init_best():
+            best_scr[...] = jnp.full_like(best_scr, -jnp.inf)
+            idx_scr[...] = jnp.zeros_like(idx_scr)
+
+        vmax = jnp.max(y, axis=1)
+        vidx = jnp.argmax(y, axis=1).astype(jnp.int32)
+        # strict > keeps the first-occurrence tie-breaking of a full argmax
+        upd = vmax > best_scr[0]
+        best_scr[0] = jnp.where(upd, vmax, best_scr[0])
+        idx_scr[0] = jnp.where(upd, t * v_block + vidx, idx_scr[0])
+
+        @pl.when(t == n_vt - 1)
+        def _emit():
+            tok_ref[0] = idx_scr[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "fmt_w", "transpose", "greedy", "top_k",
+                     "softcap_val", "v_block", "interpret"),
+)
+def decode_sample(x, w, noise=None, temperature=None, *, plan: str = "fused",
+                  fmt_w: PositFormat | None = None, transpose: bool = False,
+                  greedy: bool = False, top_k: int = 0,
+                  softcap_val: float = 0.0, v_block: int | None = None,
+                  interpret: bool = False):
+    """One-program decode epilogue: posit logits GEMM + sampling.
+
+    Replays `common.logits_head` (the execution plan's head qdot plus the
+    logit softcap) and the serving sampler (temperature / top-k /
+    `jax.random.categorical`, or greedy argmax) in a single Pallas program,
+    streaming the vocab dimension in `v_block` tiles so the [B, V] logits
+    row never round-trips through HBM between head GEMM and sampler.
+
+    x           : [B, D] final-norm'd hidden rows (one decode token/slot).
+    w           : head weights — [D, V] (or [V, D] with transpose=True, the
+                  tied-embedding layout); posit codes (integer container,
+                  decoded in-kernel via fmt_w) or float (fmt_w=None).
+    noise       : [B, V] f32 standard-gumbel noise, one row per slot — what
+                  `jax.random.categorical` draws internally, so
+                  argmax(noise + logits/T) replays it bitwise.  Ignored
+                  (and may be None) when greedy.
+    temperature : scalar f32 (ignored when greedy).
+    plan        : "fused" (f32 activations x exact in-kernel decode,
+                  matching ops.matmul_posit_weights) or "fake_quant"
+                  (unpack to x.dtype, dot in x.dtype) — the two
+                  dispatch.qdot decode-head plans, bit-for-bit.
+    top_k       : 0 (or >= V) disables the top-k filter; otherwise a
+                  streaming k-buffer phase reproduces `sort(l)[..., -k]`
+                  exactly before the filtered gumbel argmax.
+    v_block     : vocab tile width (must divide V); None = whole vocab in
+                  one grid step.  Tiling the vocab axis only (rows stay
+                  whole) keeps the f32 dot bitwise identical to the
+                  untiled `logits_head` matmul.
+
+    Returns [B] int32 sampled tokens, bit-identical to running
+    `logits_head` and the engine sampler as separate device programs.
+    """
+    B, D = x.shape
+    V = w.shape[0] if transpose else w.shape[1]
+    vb = V if v_block is None else int(v_block)
+    if V % vb:
+        raise ValueError(f"v_block {vb} must divide vocab {V}")
+    n_vt = V // vb
+    topk_active = (not greedy) and 0 < top_k < V
+    n_phase = 2 if topk_active else 1
+    if temperature is None:
+        temperature = jnp.float32(1.0)
+    t_arr = jnp.reshape(temperature, (1,)).astype(jnp.float32)
+
+    w_block = (vb, D) if transpose else (D, vb)
+    w_map = (lambda ph, t: (t, 0)) if transpose else (lambda ph, t: (0, t))
+    in_specs = [pl.BlockSpec((B, D), lambda ph, t: (0, 0)),
+                pl.BlockSpec(w_block, w_map)]
+    inputs = [x, w]
+    if not greedy:
+        if noise is None:
+            raise ValueError("non-greedy decode_sample requires noise")
+        in_specs.append(pl.BlockSpec((B, vb), lambda ph, t: (0, t)))
+        inputs.append(noise.astype(jnp.float32))
+    in_specs.append(pl.BlockSpec((1,), lambda ph, t: (0,)))
+    inputs.append(t_arr)
+
+    scratch = [pltpu.VMEM((1, B), jnp.float32),
+               pltpu.VMEM((1, B), jnp.int32)]
+    if topk_active:
+        scratch.append(pltpu.VMEM((B, int(top_k)), jnp.float32))
+
+    kernel = functools.partial(
+        _decode_sample_kernel, plan=plan, fmt_w=fmt_w, transpose=transpose,
+        greedy=greedy, top_k=int(top_k), softcap_val=softcap_val,
+        v_block=vb, n_vt=n_vt, n_phase=n_phase)
+    tok = pl.pallas_call(
+        kernel,
+        grid=(n_phase, n_vt),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, B), lambda ph, t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, B), jnp.int32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(*inputs)
+    return tok[0]

@@ -10,41 +10,44 @@ serving prefill hot path:
 
   * per (slot, page) grid cell the slot's page arrives HBM->VMEM at posit
     code width via the scalar-prefetched block table (no dense gather in
-    HBM), is decoded in-kernel, and is staged into a VMEM history scratch,
+    HBM), is decoded in-kernel, and is staged into a VMEM ring buffer one
+    flash chunk wide,
   * the same cell posit-encodes the chunk rows that land in this page and
     merge-writes them back into the pool *in place*
     (`input_output_aliases` + a block-table-driven output index_map:
     pages outside the chunk span — or not owned by this shard — redirect
     to the trash page 0, so untouched pages pass through unchanged),
-  * on the slot's last page step the full-span softmax runs over
-    [staged history | raw chunk] and the attention output is written.
+  * each time the staging buffer completes a full flash chunk of history,
+    one running flash-softmax step folds it into VMEM state scratch
+    (m/l/o); on the slot's last page step the remaining staged rows, the
+    raw chunk, and the zero pad replay flash's tail chunks and the
+    attention output is written.
 
 Bit-exactness contract
 ----------------------
 
-The attention here is NOT the page-streamed softmax of
-kernels/paged_attention.py: accumulating page-by-page changes the
-floating-point grouping and cannot reproduce `common.flash_attention`
-bit-for-bit.  Instead, for spans that fit one flash chunk
-(history + chunk <= models.paged.FLASH_CHUNK, every serving config), the
-kernel replays flash_attention's single-chunk degenerate pass op-for-op —
-same masking, same running-max/correction arithmetic including the
-`o0 * corr + pv` step (dropping it flips -0.0 signs), same finalize —
-so the fused path is bit-identical to the three-program path.  Callers
-(models/transformer.py) gate on `paged.fused_prefill_span_ok` and fall
-back to the decomposed path for longer spans.
+For ANY span the kernel replays `common.flash_attention`'s chunked
+streaming scan op-for-op at the caller's `flash_chunk` — same chunk
+boundaries over [decoded history | raw chunk | pad], same masking, same
+running-max/correction arithmetic including the `o * corr + pv` step
+(dropping it flips -0.0 signs), same finalize — so the fused path is
+bit-identical to the three-program decomposed path.  The only geometry
+requirement is that spans beyond one flash chunk need `page_size` to
+divide `flash_chunk` (pages must tile the per-chunk staging buffer);
+callers gate on `paged.fused_prefill_span_ok` and fall back to the
+decomposed path otherwise.
 
 Intra-chunk attention uses the *raw* (pre-encode) k/v and only history
 reads see decoded codes, exactly like `_chunk_attn`; history decode
 replays the `kv_decode` dtype chain (f32 -> compute dtype -> k dtype).
 
-Sharded pools (`hist_k/hist_v` given): history cannot be staged from the
-local sub-pool (other shards hold part of it), so the caller passes the
-exact psum-gathered code rows (`paged.gather_slots(..., shard)`) and the
-kernel reads history from that dense input instead of scratch — attention
-is then computed identically on every shard while `page_ok` restricts the
-page writes to owned pages (non-owned chunk pages redirect to the local
-trash page, the `insert_chunk(shard=...)` contract).
+Sharded pools (`hist_pool_k/v` + `hist_bt` given): history cannot be
+staged from the local sub-pool (other shards hold part of it), so the
+caller passes the all-gathered global pool and the kernel stages history
+pages from it via the globally-addressed `hist_bt` block table —
+attention is then computed identically on every shard while `page_ok`
+restricts the page writes to owned pages (non-owned chunk pages redirect
+to the local trash page, the `insert_chunk(shard=...)` contract).
 """
 from __future__ import annotations
 
@@ -78,34 +81,58 @@ def _decode_hist(x, fmt_kv, compute_dtype, out_dtype):
     return val.astype(compute_dtype).astype(out_dtype)
 
 
-def _fused_prefill_kernel(bt_ref, st_ref, win_ref, ok_ref, q_ref, k_ref,
-                          v_ref, *refs, fmt_kv: PositFormat | None,
+def _fused_prefill_kernel(bt_ref, st_ref, win_ref, ok_ref, hbt_ref, q_ref,
+                          k_ref, v_ref, *refs, fmt_kv: PositFormat | None,
                           compute_dtype, page_size: int, chunk: int,
                           n_pages_per_slot: int, n_heads: int,
                           n_kv_heads: int, head_dim: int, softcap_val: float,
-                          dense_hist: bool):
-    if dense_hist:
-        hk_ref, hv_ref, kp_ref, vp_ref, attn_ref, kp_out, vp_out = refs
-        hk_scr = hv_scr = None
+                          flash_chunk: int, global_hist: bool):
+    if global_hist:
+        hkp_ref, hvp_ref, *refs = refs
     else:
-        kp_ref, vp_ref, attn_ref, kp_out, vp_out, hk_scr, hv_scr = refs
+        hkp_ref = hvp_ref = None
+    kp_ref, vp_ref, attn_ref, kp_out, vp_out, hk_scr, hv_scr, *state = refs
     b = pl.program_id(0)
     p = pl.program_id(1)
     ps, C, M = page_size, chunk, n_pages_per_slot
     F = n_kv_heads * head_dim
+    G = n_heads // n_kv_heads
+    Dh = head_dim
+    # flash_attention's chunk geometry, replayed statically: the key span
+    # [history S_h | chunk C | pad] is scanned in ck-row chunks; the first
+    # n_hist_full chunks are pure history and stream through the staging
+    # ring, the tail (history remainder + raw chunk + pad) runs on the
+    # slot's last page step.
+    S_h = M * ps
+    ck = min(flash_chunk, S_h + C)
+    n_hist_full = S_h // ck
+    h_rem = S_h - n_hist_full * ck
+    n_tail = -(-(h_rem + C) // ck)
+    tail_pad = n_tail * ck - (h_rem + C)
+    R = min(S_h, ck) // ps  # staging ring size, in pages
     start = st_ref[b]
+
+    if state:
+        m_scr, l_scr, o_scr = state
+
+        @pl.when(p == 0)
+        def _init_state():
+            m_scr[...] = jnp.full((n_kv_heads, G, C), _NEG, jnp.float32)
+            l_scr[...] = jnp.zeros((n_kv_heads, G, C), jnp.float32)
+            o_scr[...] = jnp.zeros((n_kv_heads, G, C, Dh), jnp.float32)
 
     # Snapshot the page before any aliased output write: history staging
     # and the read side of the merge must see pre-insert pool content
     # (exactly what paged.gather_slot would have gathered).
     old_k = kp_ref[0]
     old_v = vp_ref[0]
-
-    if not dense_hist:
-        hk_scr[pl.ds(p * ps, ps)] = _decode_hist(old_k, fmt_kv, compute_dtype,
-                                                 hk_scr.dtype)
-        hv_scr[pl.ds(p * ps, ps)] = _decode_hist(old_v, fmt_kv, compute_dtype,
-                                                 hv_scr.dtype)
+    src_k = hkp_ref[0] if global_hist else old_k
+    src_v = hvp_ref[0] if global_hist else old_v
+    stage = (p % R) * ps
+    hk_scr[pl.ds(stage, ps)] = _decode_hist(src_k, fmt_kv, compute_dtype,
+                                            hk_scr.dtype)
+    hv_scr[pl.ds(stage, ps)] = _decode_hist(src_v, fmt_kv, compute_dtype,
+                                            hv_scr.dtype)
 
     # ---- in-kernel encode + page write ------------------------------------
     # rows r of page p hold absolute positions p*ps + r; the chunk occupies
@@ -132,61 +159,102 @@ def _fused_prefill_kernel(bt_ref, st_ref, win_ref, ok_ref, q_ref, k_ref,
     kp_out[0] = jnp.where(wm, k_codes.astype(old_k.dtype), old_k)
     vp_out[0] = jnp.where(wm, v_codes.astype(old_v.dtype), old_v)
 
-    # ---- attention on the slot's last page step ---------------------------
-    @pl.when(p == M - 1)
-    def _attend():
-        S_h = M * ps
-        kdt = k_ref.dtype
-        if dense_hist:
-            hk = _decode_hist(hk_ref[0], fmt_kv, compute_dtype, kdt)
-            hv = _decode_hist(hv_ref[0], fmt_kv, compute_dtype, kdt)
-        else:
-            hk = hk_scr[...]
-            hv = hv_scr[...]
-        G = n_heads // n_kv_heads
-        scale = 1.0 / math.sqrt(head_dim)
-        qg = q_ref[0].reshape(C, n_kv_heads, G, head_dim) \
-                     .astype(jnp.float32) * scale
-        k_all = jnp.concatenate(
-            [hk.reshape(S_h, n_kv_heads, head_dim), k_ref[0]], axis=0)
-        v_all = jnp.concatenate(
-            [hv.reshape(S_h, n_kv_heads, head_dim), v_ref[0]], axis=0)
-        hist_pos = jax.lax.iota(jnp.int32, S_h)
-        hist_pos = jnp.where(hist_pos < start, hist_pos, -1)
-        q_pos = start + jax.lax.iota(jnp.int32, C)
-        kv_pos = jnp.concatenate([hist_pos, q_pos])
-        # flash_attention's single-chunk pass, replayed verbatim (B=1 blocks)
-        s = jnp.einsum("qhgd,khd->hgqk", qg, k_all.astype(jnp.float32))
+    # ---- running flash softmax --------------------------------------------
+    scale = 1.0 / math.sqrt(Dh)
+    q_pos = start + jax.lax.iota(jnp.int32, C)
+
+    def _qg():
+        return q_ref[0].reshape(C, n_kv_heads, G, Dh) \
+                       .astype(jnp.float32) * scale
+
+    def _flash_step(m, l, o, kb, vb, kv_pos, qg):
+        # one chunk of flash_attention's streaming scan, replayed verbatim
+        # (B=1 blocks)
+        s = jnp.einsum("qhgd,khd->hgqk", qg, kb.astype(jnp.float32))
         s = _softcap(s, softcap_val)
         mask = kv_pos[None, :] >= 0
         mask &= q_pos[:, None] >= kv_pos[None, :]
         mask &= (q_pos[:, None] - kv_pos[None, :]) < win_ref[0]
         s = jnp.where(mask[None, None, :, :], s, _NEG)
-        m0 = jnp.full((n_kv_heads, G, C), _NEG, jnp.float32)
-        l0 = jnp.zeros((n_kv_heads, G, C), jnp.float32)
-        o0 = jnp.zeros((n_kv_heads, G, C, head_dim), jnp.float32)
-        m_new = jnp.maximum(m0, jnp.max(s, axis=-1))
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         pr = jnp.exp(s - m_new[..., None])
-        corr = jnp.exp(m0 - m_new)
-        l_new = l0 * corr + jnp.sum(pr, axis=-1)
-        pv = jnp.einsum("hgqk,khd->hgqd", pr, v_all.astype(jnp.float32))
-        # keep the o0*corr term: 0.0*corr + (-0.0) is +0.0, matching flash;
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pr, axis=-1)
+        pv = jnp.einsum("hgqk,khd->hgqd", pr, vb.astype(jnp.float32))
+        # keep the o*corr term: 0.0*corr + (-0.0) is +0.0, matching flash;
         # writing `pv` alone would flip those signs
-        o_new = o0 * corr[..., None] + pv
-        o = o_new / jnp.maximum(l_new, 1e-30)[..., None]
-        out = jnp.moveaxis(o, 2, 0).reshape(C, n_heads, head_dim)
+        o_new = o * corr[..., None] + pv
+        return m_new, l_new, o_new
+
+    if n_hist_full:
+        # the staging ring just completed a full flash chunk of history:
+        # fold it into the running state
+        @pl.when(((p + 1) % R == 0) & (p + 1 <= n_hist_full * R))
+        def _hist_step():
+            qg = _qg()
+            kb = hk_scr[...].reshape(ck, n_kv_heads, Dh)
+            vb = hv_scr[...].reshape(ck, n_kv_heads, Dh)
+            base = (p + 1) * ps - ck
+            pos = base + jax.lax.iota(jnp.int32, ck)
+            pos = jnp.where(pos < start, pos, -1)
+            m_new, l_new, o_new = _flash_step(
+                m_scr[...], l_scr[...], o_scr[...], kb, vb, pos, qg)
+            m_scr[...] = m_new
+            l_scr[...] = l_new
+            o_scr[...] = o_new
+
+    # ---- tail chunks + finalize on the slot's last page step --------------
+    @pl.when(p == M - 1)
+    def _attend():
+        kdt = k_ref.dtype
+        qg = _qg()
+        if state:
+            m = m_scr[...]
+            l = l_scr[...]
+            o = o_scr[...]
+        else:
+            m = jnp.full((n_kv_heads, G, C), _NEG, jnp.float32)
+            l = jnp.zeros((n_kv_heads, G, C), jnp.float32)
+            o = jnp.zeros((n_kv_heads, G, C, Dh), jnp.float32)
+        parts_k, parts_v, parts_pos = [], [], []
+        if h_rem:
+            hk = hk_scr[...][:h_rem].reshape(h_rem, n_kv_heads, Dh)
+            hv = hv_scr[...][:h_rem].reshape(h_rem, n_kv_heads, Dh)
+            hp = n_hist_full * ck + jax.lax.iota(jnp.int32, h_rem)
+            parts_k.append(hk)
+            parts_v.append(hv)
+            parts_pos.append(jnp.where(hp < start, hp, -1))
+        parts_k.append(k_ref[0])
+        parts_v.append(v_ref[0])
+        parts_pos.append(q_pos)
+        if tail_pad:
+            parts_k.append(jnp.zeros((tail_pad, n_kv_heads, Dh), kdt))
+            parts_v.append(jnp.zeros((tail_pad, n_kv_heads, Dh), kdt))
+            parts_pos.append(jnp.full((tail_pad,), -1, jnp.int32))
+        k_tail = jnp.concatenate(parts_k, axis=0)
+        v_tail = jnp.concatenate(parts_v, axis=0)
+        pos_tail = jnp.concatenate(parts_pos)
+        for jt in range(n_tail):
+            sl = slice(jt * ck, (jt + 1) * ck)
+            m, l, o = _flash_step(m, l, o, k_tail[sl], v_tail[sl],
+                                  pos_tail[sl], qg)
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.moveaxis(o, 2, 0).reshape(C, n_heads, Dh)
         attn_ref[0] = out.astype(q_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("fmt_kv", "compute_dtype", "softcap_val", "interpret"),
+    static_argnames=("fmt_kv", "compute_dtype", "softcap_val", "flash_chunk",
+                     "interpret", "dimension_semantics", "vmem_limit_mb"),
 )
 def prefill_attention_paged(q, k, v, k_pages, v_pages, block_tables, starts,
                             window, fmt_kv: PositFormat | None = None,
                             compute_dtype=jnp.float32, softcap_val: float = 0.0,
-                            interpret: bool = False, hist_k=None, hist_v=None,
-                            page_ok=None):
+                            flash_chunk: int = 1024, interpret: bool = False,
+                            hist_pool_k=None, hist_pool_v=None, hist_bt=None,
+                            page_ok=None, dimension_semantics: str | None = None,
+                            vmem_limit_mb: int | None = None):
     """Fused prefill: chunk attention + posit KV encode + paged insert.
 
     q            : [B, C, Hq, Dh] post-rope queries (chunk positions
@@ -199,10 +267,16 @@ def prefill_attention_paged(q, k, v, k_pages, v_pages, block_tables, starts,
                    inactive slots zeroed -> writes land on the trash page.
     starts       : [B] int32 chunk start position per slot.
     window       : [1] int32 sliding window (>= max_seq = unbounded).
-    hist_k/v     : optional [B, M*page_size, Hkv*Dh] pre-gathered history
-                   codes (kv_pages-sharded pools: the exact psum gather).
-                   When omitted, history is staged from the pool in-kernel.
+    flash_chunk  : flash_attention key-chunk length the kernel replays
+                   (spans beyond it require page_size | flash_chunk).
+    hist_pool_k/v: optional [n_pages_global, page_size, Hkv*Dh] all-
+                   gathered global pool (kv_pages-sharded pools) history
+                   pages are staged from; `hist_bt` then carries the
+                   *global* page ids.  When omitted, history is staged
+                   from the local pool via `block_tables`.
     page_ok      : optional [B, M] write-ownership mask (sharded pools).
+    dimension_semantics / vmem_limit_mb : TPU launch knobs (autotuned);
+                   value-neutral by construction.
 
     Returns (attn [B, C, Hq, Dh] in q.dtype, k_pages', v_pages') with the
     pools updated in place (donated/aliased) exactly as
@@ -217,19 +291,32 @@ def prefill_attention_paged(q, k, v, k_pages, v_pages, block_tables, starts,
     if k.shape != (B, C, Hkv, Dh) or v.shape != (B, C, Hkv, Dh):
         raise ValueError(f"chunk k/v shape {k.shape} != {(B, C, Hkv, Dh)}")
     M = block_tables.shape[1]
-    dense_hist = hist_k is not None
-    if dense_hist and hist_k.shape != (B, M * ps, kvd):
-        raise ValueError(f"hist shape {hist_k.shape} != {(B, M * ps, kvd)}")
+    global_hist = hist_pool_k is not None
+    if global_hist:
+        if hist_bt is None:
+            raise ValueError("hist_pool_k/v require the global hist_bt")
+        if hist_pool_k.shape[1:] != (ps, kvd):
+            raise ValueError(f"hist pool page shape {hist_pool_k.shape[1:]} "
+                             f"!= {(ps, kvd)}")
     if page_ok is None:
         page_ok = jnp.ones((B, M), jnp.int32)
+    S_h = M * ps
+    ck = min(int(flash_chunk), S_h + C)
+    n_hist_full = S_h // ck
+    if n_hist_full and ck % ps:
+        raise ValueError(f"span {S_h}+{C} needs page_size {ps} to divide "
+                         f"flash_chunk {ck} (see fused_prefill_span_ok)")
 
-    def _qmap(b, p, bt, st, wn, ok):
+    def _qmap(b, p, bt, st, wn, ok, hbt):
         return (b, 0, 0, 0)
 
-    def _pmap(b, p, bt, st, wn, ok):
+    def _pmap(b, p, bt, st, wn, ok, hbt):
         return (bt[b, p], 0, 0)
 
-    def _wmap(b, p, bt, st, wn, ok):
+    def _hmap(b, p, bt, st, wn, ok, hbt):
+        return (hbt[b, p], 0, 0)
+
+    def _wmap(b, p, bt, st, wn, ok, hbt):
         pstart = p * ps
         w = (pstart < st[b] + C) & (pstart + ps > st[b]) & (ok[b, p] > 0)
         return (jnp.where(w, bt[b, p], 0), 0, 0)
@@ -238,21 +325,25 @@ def prefill_attention_paged(q, k, v, k_pages, v_pages, block_tables, starts,
     page_spec = pl.BlockSpec((1, ps, kvd), _pmap)
     in_specs = [pl.BlockSpec((1, C, Hq, Dh), _qmap), chunk_spec, chunk_spec]
     inputs = [q, k, v]
-    if dense_hist:
-        hist_spec = pl.BlockSpec((1, M * ps, kvd),
-                                 lambda b, p, bt, st, wn, ok: (b, 0, 0))
+    if global_hist:
+        hist_spec = pl.BlockSpec((1, ps, kvd), _hmap)
         in_specs += [hist_spec, hist_spec]
-        inputs += [hist_k, hist_v]
-        scratch = []
-    else:
-        scratch = [pltpu.VMEM((M * ps, kvd), k.dtype),
-                   pltpu.VMEM((M * ps, kvd), v.dtype)]
+        inputs += [hist_pool_k, hist_pool_v]
     in_specs += [page_spec, page_spec]
     inputs += [k_pages, v_pages]
-    # flattened input index of k_pages/v_pages, counting the 4 scalar-
+    # flattened input index of k_pages/v_pages, counting the 5 scalar-
     # prefetch operands first — aliased onto pool outputs 1 and 2
-    kp_idx = 4 + len(in_specs) - 2
+    kp_idx = 5 + len(in_specs) - 2
     aliases = {kp_idx: 1, kp_idx + 1: 2}
+
+    buf_rows = min(S_h, ck)
+    scratch = [pltpu.VMEM((buf_rows, kvd), k.dtype),
+               pltpu.VMEM((buf_rows, kvd), v.dtype)]
+    if n_hist_full:
+        G = Hq // Hkv
+        scratch += [pltpu.VMEM((Hkv, G, C), jnp.float32),
+                    pltpu.VMEM((Hkv, G, C), jnp.float32),
+                    pltpu.VMEM((Hkv, G, C, Dh), jnp.float32)]
 
     out_specs = [
         pl.BlockSpec((1, C, Hq, Dh), _qmap),
@@ -266,7 +357,7 @@ def prefill_attention_paged(q, k, v, k_pages, v_pages, block_tables, starts,
     ]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=5,
         grid=(B, M),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -276,16 +367,20 @@ def prefill_attention_paged(q, k, v, k_pages, v_pages, block_tables, starts,
         _fused_prefill_kernel, fmt_kv=fmt_kv, compute_dtype=compute_dtype,
         page_size=ps, chunk=C, n_pages_per_slot=M, n_heads=Hq,
         n_kv_heads=Hkv, head_dim=Dh, softcap_val=softcap_val,
-        dense_hist=dense_hist)
+        flash_chunk=int(flash_chunk), global_hist=global_hist)
+    cp_kwargs = {"dimension_semantics":
+                 (dimension_semantics or "parallel", "arbitrary")}
+    if vmem_limit_mb is not None:
+        cp_kwargs["vmem_limit_bytes"] = int(vmem_limit_mb) << 20
+    hbt = hist_bt if global_hist else block_tables
     attn, k_new, v_new = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=out_shapes,
         input_output_aliases=aliases,
         interpret=interpret,
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
+        compiler_params=_CompilerParams(**cp_kwargs),
     )(block_tables.astype(jnp.int32), starts.astype(jnp.int32),
-      window.astype(jnp.int32), page_ok.astype(jnp.int32), *inputs)
+      window.astype(jnp.int32), page_ok.astype(jnp.int32),
+      hbt.astype(jnp.int32), *inputs)
     return attn, k_new, v_new

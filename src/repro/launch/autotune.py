@@ -33,6 +33,7 @@ from repro.core import posit
 from repro.core.formats import P8_2, P13_2, P16_1, P16_2
 from repro.kernels import autotune
 from repro.kernels import paged_attention as paged_attention_mod
+from repro.kernels import prefill_attention as prefill_attention_mod
 from repro.kernels import posit_codec, posit_matmul
 
 
@@ -59,11 +60,25 @@ def sweep_points(quick: bool):
     paged = [((4, 8, 8, 16, 128), (P16_1,)),
              ((8, 8, 16, 16, 128), (P8_2,)),
              ((4, 8, 8, 4, 16), (P16_1,))]
+    # fused prefill (B, C, M, ps, F): serving-default paged geometry plus
+    # the tiny smoke-config band
+    prefill = [((2, 64, 8, 16, 128), (P16_1,)),
+               ((4, 64, 4, 16, 128), (P8_2,)),
+               ((2, 16, 4, 16, 8), (P8_2,)),
+               ((2, 16, 4, 16, 8), (P16_1,))]
+    # fused decode epilogue (B, D, V): packed-head serving bands plus the
+    # tiny smoke-config vocab and a float-master (fake_quant) point
+    decode = [((4, 256, 4096), (P16_2,)),
+              ((2, 16, 64), (P16_2,)),
+              ((2, 64, 256), (None,))]
     if quick:
         codec, mm, grouped, paged = codec[:1], mm[:1], grouped[:1], paged[:1]
+        prefill, decode = prefill[:1], decode[:1]
     return {"posit_codec.decode": codec, "posit_codec.encode": codec,
             "posit_matmul": mm, "posit_matmul_grouped": grouped,
-            "paged_attention": paged}
+            "paged_attention": paged,
+            "prefill_attention": prefill,
+            "decode_sample": decode}
 
 
 def _runner(kernel: str, shape, fmts, rng):
@@ -113,6 +128,41 @@ def _runner(kernel: str, shape, fmts, rng):
         return lambda p: functools.partial(
             paged_attention_mod.paged_attention, q, kp, vp, bt, lengths,
             win, fmt_kv=fmt, interpret=interp, **p)
+    if kernel == "prefill_attention":
+        B, C, M, ps, F = shape
+        (fmt,) = fmts
+        Dh = 64 if F % 128 == 0 else F // 2
+        Hkv = F // Dh
+        n_pages = 1 + B * M
+        q = jnp.asarray(rng.normal(0, 1, (B, C, 4 * Hkv, Dh)), jnp.float32)
+        kc = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+        vc = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+        kp = posit.pack(jnp.asarray(rng.normal(0, 1, (n_pages, ps, F)),
+                                    jnp.float32), fmt)
+        vp = posit.pack(jnp.asarray(rng.normal(0, 1, (n_pages, ps, F)),
+                                    jnp.float32), fmt)
+        bt = jnp.asarray(1 + np.arange(B * M).reshape(B, M), jnp.int32)
+        starts = jnp.full((B,), ps, jnp.int32)  # one history page
+        win = jnp.full((1,), 2 ** 30, jnp.int32)
+        return lambda p: functools.partial(
+            prefill_attention_mod.prefill_attention_paged, q, kc, vc,
+            kp, vp, bt, starts, win, fmt_kv=fmt, interpret=interp, **p)
+    if kernel == "decode_sample":
+        B, D, V = shape
+        (fmt,) = fmts
+        x = jnp.asarray(rng.normal(0, 1, (B, D)), jnp.float32)
+        w = jnp.asarray(rng.normal(0, 1, (D, V)), jnp.float32)
+        plan = "fused" if fmt is not None else "fake_quant"
+        if fmt is not None:
+            w = posit.pack(w, fmt)
+        noise = jnp.asarray(rng.gumbel(size=(B, V)), jnp.float32)
+        temp = jnp.float32(0.8)
+        # the sweep grid's 0 sentinel = whole vocab (ops.decode_sample
+        # applies the same translation at dispatch time)
+        return lambda p: functools.partial(
+            paged_attention_mod.decode_sample, x, w, noise, temp,
+            plan=plan, fmt_w=fmt, top_k=min(8, V), interpret=interp,
+            v_block=(None if p["v_block"] == 0 else p["v_block"]))
     raise KeyError(kernel)
 
 

@@ -68,6 +68,33 @@ def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
     return _mod(cfg).decode_step(params, tokens, cache, cfg, shard=shard)
 
 
+def sample_noise(keys, vocab_size: int):
+    """Per-slot standard-gumbel noise [B, V] for the fused decode step —
+    exactly what `jax.random.categorical(key, logits)` draws internally,
+    so `argmax(noise + logits/T)` replays the decomposed sampler bitwise."""
+    return jax.vmap(
+        lambda kk: jax.random.gumbel(kk, (vocab_size,), jnp.float32))(keys)
+
+
+def decode_and_sample(params, tokens, cache, cfg: ModelConfig, noise,
+                      temperature, *, greedy: bool, top_k: int, shard=None):
+    """One-program decode step: attention + logits head + sampling epilogue
+    in a single device dispatch.  Returns ([B] int32 tokens, cache') —
+    bit-identical to `decode_step` followed by the engine sampler (the
+    model's sample_head replays the head qdot plan and the temperature /
+    top-k / gumbel-argmax sampler inside one Pallas program).
+
+    noise: [B, V] f32 gumbel rows from `sample_noise` (None when greedy);
+    temperature: f32 scalar (ignored when greedy)."""
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    from . import common
+    spec = common.SampleSpec(noise=noise, temperature=temperature,
+                             greedy=greedy, top_k=top_k)
+    return _mod(cfg).decode_step(params, tokens, cache, cfg, shard=shard,
+                                 sample=spec)
+
+
 def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):
     """Process one prompt chunk [1, C] for one slot of a serving cache
     (dense or paged) at positions length[slot] + [0, C).  The serving

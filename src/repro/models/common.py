@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import posit
 from repro.core.quant import QuantPolicy
-from repro.kernels import dispatch
+from repro.kernels import dispatch, ops
 from repro.parallel import sharding
 from .config import ModelConfig
 
@@ -256,6 +256,62 @@ def logits_head(x, emb_or_head, cfg: ModelConfig, transpose: bool):
                         out_dtype=jnp.float32)
     out = softcap(out, cfg.logit_softcap)
     return sharding.constrain(out, ("batch", None, "vocab"))
+
+
+@dataclasses.dataclass
+class SampleSpec:
+    """Sampling epilogue parameters for the fused one-program decode step.
+
+    Constructed inside the engine's jit'd decode function (never crosses a
+    jit boundary, so no pytree registration): `noise` is per-slot standard
+    gumbel [B, V] (None when greedy — categorical(key, l) == argmax of
+    gumbel + l), `temperature` a traced f32 scalar, `greedy`/`top_k` static.
+    """
+    noise: Optional[jax.Array]
+    temperature: jax.Array
+    greedy: bool
+    top_k: int
+
+
+def sample_head(x, emb_or_head, cfg: ModelConfig, sample: SampleSpec,
+                transpose: bool):
+    """Fused replacement for `logits_head` + the serving sampler.
+
+    Replays logits_head's head qdot plan (weights-only quantization, f32
+    accumulate, logit softcap) and the temperature/top-k/gumbel sampler in
+    one Pallas program (ops.decode_sample), streaming the vocab axis so the
+    [B, V] logits never round-trip through HBM.  Bit-identical tokens to
+    the two-program logits_head -> sampler path.
+
+    x: [B, D] hidden rows (one decode token per slot).  The head weights
+    stay untransposed — the kernel transposes per vocab tile, which commutes
+    with the elementwise decode.  bit_exact plans have no fused head
+    (the engine keeps the decomposed path there).
+    """
+    policy = cfg.quant
+    w = emb_or_head
+    fmt_w = policy.weights
+    if policy.execution == "fake_quant":
+        plan = "fake_quant"
+        if not dispatch.is_packed(w):
+            # float masters: qdot fake-quantizes the weights on float before
+            # the dot (elementwise, so it commutes with the in-kernel
+            # transpose) and the kernel sees plain float weights
+            w = policy.maybe_quant_weight(w.astype(x.dtype))
+            fmt_w = None
+    elif policy.execution == "fused":
+        plan = "fused"
+        if not dispatch.is_packed(w) and fmt_w is not None:
+            # the STE forward: encode float masters once, decode in-kernel
+            # (ops._ste_primal's matmul_posit_weights path)
+            w = ops.encode(w.astype(jnp.float32), fmt_w)
+    else:
+        raise ValueError(f"no fused decode head for execution plan "
+                         f"{policy.execution!r}")
+    return ops.decode_sample(
+        x, w, sample.noise, sample.temperature, plan=plan, fmt_w=fmt_w,
+        transpose=transpose, greedy=sample.greedy, top_k=sample.top_k,
+        softcap_val=cfg.logit_softcap)
 
 
 def cross_entropy(logits, labels, mask=None):

@@ -319,7 +319,8 @@ def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig,
     return logits[:, 0], new_cache
 
 
-def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None):
+def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None,
+                       sample=None):
     """Paged decode: attention sub-layers scatter the token's KV codes
     into the slot's current page and attend via the paged-attention
     kernel; mamba/FFN sub-layers are unchanged (conv/SSM states stay
@@ -354,14 +355,20 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None):
         body, x, (params["blocks"], cache["k"], cache["v"],
                   cache["conv"], cache["ssm"]))
     x = common.rms_norm(x, params["final_norm"])
+    new_cache = {"k": k_c, "v": v_c, "ssm": ssms, "conv": convs,
+                 "block_table": bt, "length": length + 1}
+    if sample is not None:
+        return common.sample_head(x[:, 0], params["embed"], cfg, sample,
+                                  transpose=True), new_cache
     logits = common.logits_head(x, params["embed"], cfg, transpose=True)
-    return logits[:, 0], {"k": k_c, "v": v_c, "ssm": ssms, "conv": convs,
-                          "block_table": bt, "length": length + 1}
+    return logits[:, 0], new_cache
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
+def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None,
+                sample=None):
     if "block_table" in cache:
-        return _decode_step_paged(params, tokens, cache, cfg, shard=shard)
+        return _decode_step_paged(params, tokens, cache, cfg, shard=shard,
+                                  sample=sample)
     if shard is not None:
         raise ValueError("kv_pages sharding requires a paged cache")
     B = tokens.shape[0]
@@ -416,6 +423,10 @@ def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
         body, x, (params["blocks"], cache["k"], cache["v"],
                   cache["conv"], cache["ssm"]))
     x = common.rms_norm(x, params["final_norm"])
+    new_cache = {"k": k_c, "v": v_c, "ssm": ssms, "conv": convs,
+                 "length": length + 1}
+    if sample is not None:
+        return common.sample_head(x[:, 0], params["embed"], cfg, sample,
+                                  transpose=True), new_cache
     logits = common.logits_head(x, params["embed"], cfg, transpose=True)
-    return logits[:, 0], {"k": k_c, "v": v_c, "ssm": ssms, "conv": convs,
-                          "length": length + 1}
+    return logits[:, 0], new_cache

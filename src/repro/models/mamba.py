@@ -314,7 +314,8 @@ def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig,
     return logits[:, 0], new_cache
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
+def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None,
+                sample=None):
     if shard is not None:
         raise ValueError("ssm state is replicated; kv_pages sharding does "
                          "not apply to the mamba family")
@@ -331,6 +332,9 @@ def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
     x, (conv_s, ssm_s) = jax.lax.scan(
         body, x, (params["layers"], cache["conv"], cache["ssm"]))
     x = common.rms_norm(x, params["final_norm"])
+    new_cache = {"ssm": ssm_s, "conv": conv_s, "length": cache["length"] + 1}
+    if sample is not None:
+        return common.sample_head(x[:, 0], params["embed"], cfg, sample,
+                                  transpose=True), new_cache
     logits = common.logits_head(x, params["embed"], cfg, transpose=True)
-    return logits[:, 0], {"ssm": ssm_s, "conv": conv_s,
-                          "length": cache["length"] + 1}
+    return logits[:, 0], new_cache

@@ -332,7 +332,8 @@ def prefill_chunk_batched(params, tokens, cache, active, cfg: ModelConfig,
     return logits[:, 0], new_cache
 
 
-def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None):
+def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None,
+                       sample=None):
     """Paged decode with MoE FFN (see transformer._decode_step_paged)."""
     x = common.embed_tokens(params["embed"], tokens[:, None], cfg)
     length = cache["length"]
@@ -352,17 +353,21 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None):
     x, (k_c, v_c) = jax.lax.scan(
         body, x, (params["layers"], flags, cache["k"], cache["v"]))
     x = common.rms_norm(x, params["final_norm"])
-    logits = common.logits_head(
-        x, params["embed"] if cfg.tie_embeddings else params["head"],
-        cfg, transpose=cfg.tie_embeddings)
-    return logits[:, 0], {"k": k_c, "v": v_c, "block_table": bt,
-                          "length": length + 1}
+    new_cache = {"k": k_c, "v": v_c, "block_table": bt, "length": length + 1}
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    if sample is not None:
+        return common.sample_head(x[:, 0], head, cfg, sample,
+                                  transpose=cfg.tie_embeddings), new_cache
+    logits = common.logits_head(x, head, cfg, transpose=cfg.tie_embeddings)
+    return logits[:, 0], new_cache
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
+def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None,
+                sample=None):
     """One autoregressive step with MoE FFN."""
     if "block_table" in cache:
-        return _decode_step_paged(params, tokens, cache, cfg, shard=shard)
+        return _decode_step_paged(params, tokens, cache, cfg, shard=shard,
+                                  sample=sample)
     if shard is not None:
         raise ValueError("kv_pages sharding requires a paged cache")
     B = tokens.shape[0]
@@ -400,7 +405,10 @@ def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
     x, (k_c, v_c) = jax.lax.scan(
         body, x, (params["layers"], flags, cache["k"], cache["v"]))
     x = common.rms_norm(x, params["final_norm"])
-    logits = common.logits_head(
-        x, params["embed"] if cfg.tie_embeddings else params["head"],
-        cfg, transpose=cfg.tie_embeddings)
-    return logits[:, 0], {"k": k_c, "v": v_c, "length": length + 1}
+    new_cache = {"k": k_c, "v": v_c, "length": length + 1}
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    if sample is not None:
+        return common.sample_head(x[:, 0], head, cfg, sample,
+                                  transpose=cfg.tie_embeddings), new_cache
+    logits = common.logits_head(x, head, cfg, transpose=cfg.tie_embeddings)
+    return logits[:, 0], new_cache

@@ -67,18 +67,23 @@ import jax.numpy as jnp
 
 
 # flash_attention's default key-chunk length (models/common.py).  The fused
-# prefill kernel replays flash's single-chunk pass bit-for-bit, so it only
-# applies when a slot's whole page span plus the incoming chunk fit in one
-# flash chunk; tests pin this against the flash_attention default.
+# prefill kernel replays flash's chunked streaming scan bit-for-bit at this
+# chunk length; tests pin this against the flash_attention default.
 FLASH_CHUNK = 1024
 
 
 def fused_prefill_span_ok(max_pages: int, page_size: int, chunk: int) -> bool:
-    """True when the fused prefill kernel is bit-exact for this geometry:
-    the gathered history (max_pages * page_size rows) plus the new chunk
-    must fit in one flash_attention key chunk, so the decomposed path's
-    streaming scan degenerates to the single pass the kernel replays."""
-    return max_pages * page_size + chunk <= FLASH_CHUNK
+    """True when the fused prefill kernel is bit-exact for this geometry.
+
+    Short spans (history plus the incoming chunk within one flash chunk)
+    replay flash_attention's degenerate single pass.  Longer spans stream
+    history page-by-page inside the kernel, running one flash softmax step
+    per completed `FLASH_CHUNK` of staged pages — which requires pages to
+    tile the flash chunk exactly.  Only a page size that does not divide
+    `FLASH_CHUNK` still forces the decomposed fallback."""
+    if max_pages * page_size + chunk <= FLASH_CHUNK:
+        return True
+    return FLASH_CHUNK % page_size == 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -230,14 +230,20 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: Optional[int] = None):
     return logits, cache
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
+def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None,
+                sample=None):
     """One autoregressive step. tokens: [B] int32. Returns (logits, cache').
 
     shard: optional paged.PageShard — the paged KV pool is kv_pages-sharded
     and this call runs inside a shard_map over that axis (block tables hold
-    global page ids; see models/paged.py)."""
+    global page ids; see models/paged.py).
+
+    sample: optional common.SampleSpec — fuse the logits head and the
+    sampling epilogue into one device program (common.sample_head) and
+    return ([B] int32 tokens, cache') instead of logits."""
     if "block_table" in cache:
-        return _decode_step_paged(params, tokens, cache, cfg, shard=shard)
+        return _decode_step_paged(params, tokens, cache, cfg, shard=shard,
+                                  sample=sample)
     if shard is not None:
         raise ValueError("kv_pages sharding requires a paged cache")
     B = tokens.shape[0]
@@ -281,10 +287,12 @@ def decode_step(params, tokens, cache, cfg: ModelConfig, shard=None):
     x, (k_c, v_c) = jax.lax.scan(
         body, x, (params["layers"], flags, cache["k"], cache["v"]))
     x = common.rms_norm(x, params["final_norm"])
-    logits = common.logits_head(
-        x, params["embed"] if cfg.tie_embeddings else params["head"],
-        cfg, transpose=cfg.tie_embeddings)
     new_cache = {"k": k_c, "v": v_c, "length": length + 1}
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    if sample is not None:
+        return common.sample_head(x[:, 0], head, cfg, sample,
+                                  transpose=cfg.tie_embeddings), new_cache
+    logits = common.logits_head(x, head, cfg, transpose=cfg.tie_embeddings)
     return logits[:, 0], new_cache
 
 
@@ -377,12 +385,14 @@ def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
     only re-reads of the cache see quantized values.  Returns
     (post-wo output [1, C, D], k_cache', v_cache').
 
-    When `cfg.quant.fused_prefill` is on and the page span fits one flash
-    chunk, the paged branch runs the fused Pallas program
-    (ops.prefill_attention_paged): attention + KV encode + page scatter
-    in one device call, bit-identical to the decomposed path below.
-    Under a kv_pages shard the exact psum-gathered history is passed in
-    densely and page writes are masked to owned pages.
+    When `cfg.quant.fused_prefill` is on and the geometry passes
+    `paged.fused_prefill_span_ok`, the paged branch runs the fused Pallas
+    program (ops.prefill_attention_paged): attention + KV encode + page
+    scatter in one device call, bit-identical to the decomposed path
+    below at any span (history beyond one flash chunk streams through
+    the kernel's running softmax).  Under a kv_pages shard the exact
+    global pool is all-gathered for history staging and page writes are
+    masked to owned pages.
     """
     _, C, _ = x.shape
     Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -405,15 +415,22 @@ def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
             attn, k_new, v_new = ops.prefill_attention_paged(
                 q, k, v, k_l, v_l, bt_row[None], starts1, win,
                 fmt_kv=cfg.quant.kv_cache, compute_dtype=cfg.compute_dtype,
-                softcap_val=cfg.logit_softcap)
+                softcap_val=cfg.logit_softcap,
+                flash_chunk=paged.FLASH_CHUNK)
         else:
-            hist_k = paged.gather_slot(k_l, bt_row, shard=shard)[None]
-            hist_v = paged.gather_slot(v_l, bt_row, shard=shard)[None]
+            # history pages can live on any shard: all-gather the code-
+            # width pool so each shard stages identical history (and thus
+            # computes bit-identical attention); writes stay masked to
+            # owned pages via the localized table + page_ok
+            gk = jax.lax.all_gather(k_l, shard.axis, axis=0, tiled=True)
+            gv = jax.lax.all_gather(v_l, shard.axis, axis=0, tiled=True)
             lbt, owned = paged.localize_ids(bt_row[None], k_l.shape[0], shard)
             attn, k_new, v_new = ops.prefill_attention_paged(
                 q, k, v, k_l, v_l, lbt, starts1, win,
                 fmt_kv=cfg.quant.kv_cache, compute_dtype=cfg.compute_dtype,
-                softcap_val=cfg.logit_softcap, hist_k=hist_k, hist_v=hist_v,
+                softcap_val=cfg.logit_softcap,
+                flash_chunk=paged.FLASH_CHUNK,
+                hist_pool_k=gk, hist_pool_v=gv, hist_bt=bt_row[None],
                 page_ok=owned.astype(jnp.int32))
         out = common.qdot(attn.reshape(1, C, Hq * Dh), p["wo"], cfg.quant,
                           prec_dtype=common.tp_prec(cfg))
@@ -446,7 +463,7 @@ def _chunk_attn(p, x, cfg: ModelConfig, k_l, v_l, start, *,
         window = None
     attn = common.flash_attention(
         q, k_all, v_all, q_pos, kv_pos, causal=True, window=window,
-        softcap_val=cfg.logit_softcap)
+        chunk_k=paged.FLASH_CHUNK, softcap_val=cfg.logit_softcap)
     out = common.qdot(attn.reshape(1, C, Hq * Dh), p["wo"], cfg.quant,
                       prec_dtype=common.tp_prec(cfg))
     return out, k_new, v_new
@@ -465,9 +482,10 @@ def _chunk_attn_batched(p, x, cfg: ModelConfig, k_l, v_l, starts, *,
     to the per-slot `_chunk_attn` path.  Returns
     (post-wo output [B, C, D], k_cache', v_cache').
 
-    Fuses like `_chunk_attn`: with `cfg.quant.fused_prefill` and a page
-    span within one flash chunk, the whole paged branch is one Pallas
-    program per chunk group (ops.prefill_attention_paged)."""
+    Fuses like `_chunk_attn`: with `cfg.quant.fused_prefill` and a
+    geometry passing `paged.fused_prefill_span_ok`, the whole paged
+    branch is one Pallas program per chunk group
+    (ops.prefill_attention_paged) at any history span."""
     B, C, _ = x.shape
     Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     h = common.rms_norm(x, p["ln1"], upcast=not cfg.tp_bf16_reduce)
@@ -487,15 +505,18 @@ def _chunk_attn_batched(p, x, cfg: ModelConfig, k_l, v_l, starts, *,
             attn, k_new, v_new = ops.prefill_attention_paged(
                 q, k, v, k_l, v_l, bt, starts.astype(jnp.int32), win,
                 fmt_kv=cfg.quant.kv_cache, compute_dtype=cfg.compute_dtype,
-                softcap_val=cfg.logit_softcap)
+                softcap_val=cfg.logit_softcap,
+                flash_chunk=paged.FLASH_CHUNK)
         else:
-            hist_k = paged.gather_slots(k_l, bt, shard=shard)
-            hist_v = paged.gather_slots(v_l, bt, shard=shard)
+            gk = jax.lax.all_gather(k_l, shard.axis, axis=0, tiled=True)
+            gv = jax.lax.all_gather(v_l, shard.axis, axis=0, tiled=True)
             lbt, owned = paged.localize_ids(bt, k_l.shape[0], shard)
             attn, k_new, v_new = ops.prefill_attention_paged(
                 q, k, v, k_l, v_l, lbt, starts.astype(jnp.int32), win,
                 fmt_kv=cfg.quant.kv_cache, compute_dtype=cfg.compute_dtype,
-                softcap_val=cfg.logit_softcap, hist_k=hist_k, hist_v=hist_v,
+                softcap_val=cfg.logit_softcap,
+                flash_chunk=paged.FLASH_CHUNK,
+                hist_pool_k=gk, hist_pool_v=gv, hist_bt=bt,
                 page_ok=owned.astype(jnp.int32))
         out = common.qdot(attn.reshape(B, C, Hq * Dh), p["wo"], cfg.quant,
                           prec_dtype=common.tp_prec(cfg))
@@ -530,13 +551,14 @@ def _chunk_attn_batched(p, x, cfg: ModelConfig, k_l, v_l, starts, *,
         window = None
     attn = common.flash_attention(
         q, k_all, v_all, pos, kv_pos, causal=True, window=window,
-        softcap_val=cfg.logit_softcap)
+        chunk_k=paged.FLASH_CHUNK, softcap_val=cfg.logit_softcap)
     out = common.qdot(attn.reshape(B, C, Hq * Dh), p["wo"], cfg.quant,
                       prec_dtype=common.tp_prec(cfg))
     return out, k_new, v_new
 
 
-def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None):
+def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None,
+                       sample=None):
     """decode_step over the paged cache: per layer, scatter the token's KV
     codes into the slot's current page and attend via the paged-attention
     kernel — decode memory traffic scales with tokens in flight."""
@@ -557,11 +579,13 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None):
     x, (k_c, v_c) = jax.lax.scan(
         body, x, (params["layers"], flags, cache["k"], cache["v"]))
     x = common.rms_norm(x, params["final_norm"])
-    logits = common.logits_head(
-        x, params["embed"] if cfg.tie_embeddings else params["head"],
-        cfg, transpose=cfg.tie_embeddings)
-    return logits[:, 0], {"k": k_c, "v": v_c, "block_table": bt,
-                          "length": length + 1}
+    new_cache = {"k": k_c, "v": v_c, "block_table": bt, "length": length + 1}
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    if sample is not None:
+        return common.sample_head(x[:, 0], head, cfg, sample,
+                                  transpose=cfg.tie_embeddings), new_cache
+    logits = common.logits_head(x, head, cfg, transpose=cfg.tie_embeddings)
+    return logits[:, 0], new_cache
 
 
 def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):

@@ -246,6 +246,7 @@ class ServingEngine:
                  prefix_sharing: Optional[bool] = None,
                  batched_prefill: Optional[bool] = None,
                  fused_prefill: Optional[bool] = None,
+                 fused_decode: Optional[bool] = None,
                  mesh=None):
         """batch_slots decode slots over a max_seq position budget per slot.
 
@@ -259,10 +260,17 @@ class ServingEngine:
         decode loop).  prefix_sharing / batched_prefill default to the
         QuantPolicy knobs (both on); sharing applies to paged engines only.
         fused_prefill overrides QuantPolicy.fused_prefill per instance
-        (rewriting cfg.quant before tracing): paged prefill chunks whose
-        page span fits one flash chunk run attention + KV encode + page
-        scatter as ONE device program instead of three, bit-identically —
-        the per-chunk program counts are reported by execution_summary().
+        (rewriting cfg.quant before tracing): paged prefill chunks run
+        attention + KV encode + page scatter as ONE device program instead
+        of three, bit-identically, for arbitrary history spans (history
+        beyond one flash chunk streams through the kernel's running flash
+        softmax) — the per-chunk program counts are reported by
+        execution_summary().  fused_decode likewise overrides
+        QuantPolicy.fused_decode: each paged decode step runs attention +
+        logits head + sampling as ONE device dispatch
+        (api.decode_and_sample) instead of a decode program followed by a
+        sampler program, with bit-identical tokens; bit_exact execution
+        keeps the decomposed pair.
 
         mesh: optional jax Mesh.  When the mesh has a >1-sized axis that the
         sharding rules map `kv_pages` onto (the 'model' axis by default),
@@ -282,6 +290,10 @@ class ServingEngine:
             cfg = dataclasses.replace(
                 cfg, quant=dataclasses.replace(
                     cfg.quant, fused_prefill=bool(fused_prefill)))
+        if fused_decode is not None:
+            cfg = dataclasses.replace(
+                cfg, quant=dataclasses.replace(
+                    cfg.quant, fused_decode=bool(fused_decode)))
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
@@ -345,6 +357,12 @@ class ServingEngine:
         else:
             self.batched_prefill = bool(batched_prefill)
 
+        # fused one-program decode: attention + logits head + sampler in a
+        # single device dispatch.  Paged engines only (the structural
+        # launch-pair residual this removes lives in the serving decode
+        # loop); bit_exact has no fused head replay.
+        self.fused_decode = (self.paged and bool(q.fused_decode)
+                             and q.execution != "bit_exact")
         self.prefill_buckets = self._valid_buckets(prefill_buckets)
         if self.n_shards > 1:
             self._install_sharded_fns()
@@ -352,6 +370,13 @@ class ServingEngine:
             self._page_shard = None
             self._decode = jax.jit(
                 lambda p, t, c: api.decode_step(p, t, c, cfg))
+            if self.fused_decode:
+                gd, tk, V = greedy, self.top_k, cfg.vocab_size
+                self._decode_sample = jax.jit(
+                    lambda p, t, c, keys, temp: api.decode_and_sample(
+                        p, t, c, cfg,
+                        None if gd else api.sample_noise(keys, V),
+                        temp, greedy=gd, top_k=tk))
             self._chunk = jax.jit(
                 lambda p, t, c, s: api.prefill_chunk(p, t, c, s, cfg))
             self._chunk_batched = jax.jit(
@@ -396,7 +421,8 @@ class ServingEngine:
         self._held: set = set()
         self.stats = {"pages_shared": 0, "shared_admissions": 0,
                       "cow_forks": 0, "prefill_batch_sizes": {},
-                      "prefill_chunks": 0, "prefill_device_programs": 0}
+                      "prefill_chunks": 0, "prefill_device_programs": 0,
+                      "decode_steps": 0, "decode_device_programs": 0}
 
         # batch-dim index per cache leaf, for restoring rows of slots that
         # were mid-prefill during a decode call (page pools have no batch
@@ -446,6 +472,30 @@ class ServingEngine:
         self._decode = jax.jit(sm(
             lambda p, t, c: api.decode_step(p, t, c, cfg, shard=sctx),
             mesh, in_specs=(prep, rep, cspec), out_specs=(rep, cspec)))
+        if self.fused_decode:
+            gd, tk, V = self.greedy, self.top_k, cfg.vocab_size
+            if gd:
+                inner = sm(
+                    lambda p, t, c, temp: api.decode_and_sample(
+                        p, t, c, cfg, None, temp, greedy=True, top_k=tk,
+                        shard=sctx),
+                    mesh, in_specs=(prep, rep, cspec, rep),
+                    out_specs=(rep, cspec))
+                self._decode_sample = jax.jit(
+                    lambda p, t, c, keys, temp: inner(p, t, c, temp))
+            else:
+                # gumbel noise is drawn once outside the shard_map (it only
+                # depends on the replicated per-slot keys) and enters
+                # replicated, so every shard samples from identical rows
+                inner = sm(
+                    lambda p, t, c, n, temp: api.decode_and_sample(
+                        p, t, c, cfg, n, temp, greedy=False, top_k=tk,
+                        shard=sctx),
+                    mesh, in_specs=(prep, rep, cspec, rep, rep),
+                    out_specs=(rep, cspec))
+                self._decode_sample = jax.jit(
+                    lambda p, t, c, keys, temp: inner(
+                        p, t, c, api.sample_noise(keys, V), temp))
         self._chunk = jax.jit(sm(
             lambda p, t, c, s: api.prefill_chunk(p, t, c, s, cfg,
                                                  shard=sctx),
@@ -605,8 +655,11 @@ class ServingEngine:
             "prefix_sharing": self.prefix_sharing,
             "batched_prefill": self.batched_prefill,
             "fused_prefill": self.paged and bool(q.fused_prefill),
+            "fused_decode": self.fused_decode,
             "prefill_chunks": self.stats["prefill_chunks"],
             "prefill_device_programs": self.stats["prefill_device_programs"],
+            "decode_steps": self.stats["decode_steps"],
+            "decode_device_programs": self.stats["decode_device_programs"],
             "pages_shared_mapped": self.pages_shared_mapped,
             "cow_forks": self.stats["cow_forks"],
         }
@@ -699,21 +752,28 @@ class ServingEngine:
         seed = req.seed if req.seed is not None else req.rid
         return jax.random.fold_in(self._base_key, seed)
 
+    def _sample_keys(self, slots, live=None):
+        """Per-row sampling keys for `slots` (dummy rows for non-live
+        slots), advancing each live slot's draw counter — shared by the
+        decomposed sampler and the fused decode-and-sample dispatch so
+        both consume the identical key stream."""
+        if self.greedy:  # argmax never reads keys: skip building them
+            return self._dummy_keys[:len(slots)]
+        keys = jnp.stack([
+            jax.random.fold_in(self._slot_keys[s],
+                               int(self._slot_sampled[s]))
+            if (live is None or live[s]) else self._dummy_keys[0]
+            for s in slots])
+        for s in slots:
+            if live is None or live[s]:
+                self._slot_sampled[s] += 1
+        return keys
+
     def _sample(self, logits_rows, slots, live=None):
         """Sample one token per row of logits_rows [n, V] for `slots`.
         `live` masks slots whose draw is discarded (dummy keys, counter
         not advanced) — lets batched paths sample a fixed [B, V] batch."""
-        if self.greedy:  # argmax never reads keys: skip building them
-            keys = self._dummy_keys[:len(slots)]
-        else:
-            keys = jnp.stack([
-                jax.random.fold_in(self._slot_keys[s],
-                                   int(self._slot_sampled[s]))
-                if (live is None or live[s]) else self._dummy_keys[0]
-                for s in slots])
-            for s in slots:
-                if live is None or live[s]:
-                    self._slot_sampled[s] += 1
+        keys = self._sample_keys(slots, live=live)
         toks = self._sampler(logits_rows, keys,
                              jnp.float32(self.temperature))
         return np.asarray(toks, np.int32)
@@ -1233,8 +1293,19 @@ class ServingEngine:
                 pos = int(self.lengths[s])
                 self._ensure_writable(int(s), pos, pos + 1)
         cache_in = self._refresh_meta(self.cache, decode_mask)
-        logits, new_cache = self._decode(
-            self.params, jnp.asarray(self.next_token), cache_in)
+        if self.fused_decode:
+            # one device program per decode step: attention + logits head +
+            # sampler fused; keys are built (and counters advanced) exactly
+            # as the decomposed path would before its sampler dispatch
+            keys = self._sample_keys(list(range(self.B)), live=decode_mask)
+            toks_all, new_cache = self._decode_sample(
+                self.params, jnp.asarray(self.next_token), cache_in, keys,
+                jnp.float32(self.temperature))
+        else:
+            logits, new_cache = self._decode(
+                self.params, jnp.asarray(self.next_token), cache_in)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_device_programs"] += 1 if self.fused_decode else 2
         if (self.slot_phase == _PREFILL).any():
             # slots mid-prefill (interleaved mode) must not have their
             # recurrent/dense state rows advanced by this decode call
@@ -1252,8 +1323,11 @@ class ServingEngine:
         # slots draw from dummy keys and are discarded) so the jitted
         # sampler never retraces as slots retire
         slots = [s for s in range(self.B) if decode_mask[s]]
-        toks = self._sample(logits, list(range(self.B)),
-                            live=decode_mask)[np.asarray(slots)]
+        if self.fused_decode:
+            toks = np.asarray(toks_all, np.int32)[np.asarray(slots)]
+        else:
+            toks = self._sample(logits, list(range(self.B)),
+                                live=decode_mask)[np.asarray(slots)]
         for tok, slot in zip(toks, slots):
             req = self.slot_req[slot]
             req.out_tokens.append(int(tok))

@@ -159,9 +159,20 @@ def test_ops_explicit_params_win_over_cache(scratch_cache):
     assert bool(jnp.all(got == ops.decode(codes, P16_2)))
 
 
+def test_largest_divisor_fallback():
+    """Dispatch-time degrade rule for cached tiles that don't divide the
+    live launch dim: largest divisor at or below the cached value."""
+    assert ops._largest_divisor(6, 4) == 3
+    assert ops._largest_divisor(7, 4) == 1
+    assert ops._largest_divisor(8, 8) == 8
+    assert ops._largest_divisor(8, 16) == 8
+    assert ops._largest_divisor(48, 32) == 24
+
+
 def test_ops_paged_rejects_nondividing_t_block(scratch_cache):
-    """A cached t_block that doesn't divide this launch's T must be
-    dropped at dispatch, not crash the kernel."""
+    """A cached t_block that doesn't divide this launch's T must degrade
+    to the largest divisor of T below it, not crash the kernel — and the
+    degraded tiling stays value-neutral."""
     rng = np.random.default_rng(13)
     B, T, Hq, Hkv, Dh, ps, M = 2, 3, 4, 2, 8, 4, 4
     fmt = P16_1
@@ -183,6 +194,63 @@ def test_ops_paged_rejects_nondividing_t_block(scratch_cache):
     autotune.reset_cache(c)
     got = ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=fmt)
     assert bool(jnp.all(got == default))
+
+
+def test_ops_decode_sample_resolves_v_block(scratch_cache):
+    """Cached vocab tiles for the fused decode epilogue resolve at
+    dispatch and never change the sampled token: the 0 sentinel collapses
+    the vocab grid, and a non-dividing tile degrades to the largest
+    divisor below it."""
+    rng = np.random.default_rng(21)
+    B, D, V = 3, 16, 48
+    x = jnp.asarray(rng.normal(0, 1, (B, D)), jnp.float32)
+    w = posit.pack(jnp.asarray(rng.normal(0, 1, (D, V)), jnp.float32), P16_2)
+    noise = jnp.asarray(rng.gumbel(size=(B, V)), jnp.float32)
+    temp = jnp.float32(0.7)
+    autotune.reset_cache(autotune.AutotuneCache())  # empty: all misses
+    want = ops.decode_sample(x, w, noise, temp, plan="fused", fmt_w=P16_2,
+                             top_k=5)
+    for vb in (0, 32):  # whole-vocab sentinel; 32 degrades to 24
+        c = autotune.AutotuneCache()
+        c.put("decode_sample", (B, D, V), {"v_block": vb}, fmts=(P16_2,))
+        autotune.reset_cache(c)
+        got = ops.decode_sample(x, w, noise, temp, plan="fused",
+                                fmt_w=P16_2, top_k=5)
+        assert c.hits.get("decode_sample", 0) >= 1
+        assert bool(jnp.all(got == want))
+
+
+def test_ops_prefill_resolves_launch_knobs(scratch_cache):
+    """Cached TPU launch knobs (dimension_semantics / VMEM budget) for the
+    fused prefill kernel resolve at dispatch and are value-neutral."""
+    rng = np.random.default_rng(22)
+    B, C, Hq, Hkv, Dh, ps, M = 2, 4, 4, 2, 8, 4, 2
+    fmt = P16_1
+    F = Hkv * Dh
+    n_pages = 1 + B * M
+    q = jnp.asarray(rng.normal(0, 1, (B, C, Hq, Dh)), jnp.float32)
+    kc = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+    vc = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
+    kp = posit.pack(jnp.asarray(rng.normal(0, 1, (n_pages, ps, F)),
+                                jnp.float32), fmt)
+    vp = posit.pack(jnp.asarray(rng.normal(0, 1, (n_pages, ps, F)),
+                                jnp.float32), fmt)
+    bt = jnp.asarray(1 + np.arange(B * M).reshape(B, M), jnp.int32)
+    starts = jnp.full((B,), ps, jnp.int32)
+    win = jnp.full((1,), 2 ** 30, jnp.int32)
+    autotune.reset_cache(autotune.AutotuneCache())
+    want = ops.prefill_attention_paged(q, kc, vc, kp, vp, bt, starts, win,
+                                       fmt_kv=fmt)
+    c = autotune.AutotuneCache()
+    c.put("prefill_attention", (B, C, M, ps, F),
+          {"dimension_semantics": "arbitrary", "vmem_limit_mb": 64},
+          fmts=(fmt,))
+    autotune.reset_cache(c)
+    got = ops.prefill_attention_paged(q, kc, vc, kp, vp, bt, starts, win,
+                                      fmt_kv=fmt)
+    assert c.hits.get("prefill_attention", 0) >= 1
+    for a, b in zip(got, want):
+        assert bool(jnp.all(a == b))
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +287,9 @@ def test_oracle_cost_positive_finite():
                  "posit_codec.encode": (512, 512),
                  "posit_matmul": (256, 256, 256),
                  "posit_matmul_grouped": (4, 128, 128, 128),
-                 "paged_attention": (4, 8, 8, 16, 128)}[kernel]
+                 "paged_attention": (4, 8, 8, 16, 128),
+                 "prefill_attention": (2, 64, 8, 16, 128),
+                 "decode_sample": (4, 256, 4096)}[kernel]
         fmts = {"posit_matmul": (P16_2, P16_2),
                 "posit_matmul_grouped": (None, P16_2)}.get(kernel, (P16_2,))
         for params in autotune.candidates(kernel):

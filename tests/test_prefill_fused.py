@@ -10,12 +10,16 @@ pin the contract that makes it a pure perf move:
     decomposed gather -> decode -> flash -> encode -> insert composite,
     across KV formats (f32 pool, P(16,1), P(8,2)), compute dtypes,
     mid-page starts, window+softcap, per-slot vs batched launches, and
-    the sharded dense-history variant (hist_k/hist_v + page_ok masks);
+    the sharded global-pool variant (hist_pool_k/v + hist_bt global page
+    ids + page_ok write-ownership masks);
   * the static applicability gate (paged.fused_prefill_span_ok) stays in
     sync with the flash kernel's chunk size, so fusion never changes the
-    chunking the legacy path would have used;
+    chunking the legacy path would have used — spans past one flash chunk
+    stream history page-by-page inside the kernel and stay admitted
+    whenever the page size tiles paged.FLASH_CHUNK;
   * ServingEngine(fused_prefill=...) emits token-identical streams either
-    way while the prefill_device_programs counter drops 3x -> 1x.
+    way while the prefill_device_programs counter drops 3x -> 1x,
+    including needle-style long prompts spanning >= 3 flash chunks.
 """
 import inspect
 
@@ -128,8 +132,9 @@ def test_fused_prefill_bitwise_vs_decomposed(name):
     win_arr = jnp.full((1,), 2 ** 30 if win is None else win, jnp.int32)
     kw = {}
     if dense:
-        kw = dict(hist_k=paged.gather_slots(pool_k, bt),
-                  hist_v=paged.gather_slots(pool_v, bt))
+        # single-pool stand-in for the sharded path: the "all-gathered"
+        # global pool is the pool itself and hist_bt carries global ids
+        kw = dict(hist_pool_k=pool_k, hist_pool_v=pool_v, hist_bt=bt)
     if per_slot:
         attn = jnp.zeros_like(ref_attn)
         k_new, v_new = pool_k, pool_v
@@ -171,15 +176,14 @@ def test_fused_prefill_page_ok_masks_writes():
     k = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
     v = jnp.asarray(rng.normal(0, 1, (B, C, Hkv, Dh)), jnp.float32)
     win_arr = jnp.full((1,), 2 ** 30, jnp.int32)
-    hk, hv = paged.gather_slots(pool_k, bt), paged.gather_slots(pool_v, bt)
     owned = jnp.zeros_like(bt).at[0].set(1)  # shard owns slot 0's pages only
 
     full_attn, full_k, full_v = ops.prefill_attention_paged(
         q, k, v, pool_k, pool_v, bt, starts, win_arr, fmt_kv=fmt,
-        hist_k=hk, hist_v=hv)
+        hist_pool_k=pool_k, hist_pool_v=pool_v, hist_bt=bt)
     attn, k_new, v_new = ops.prefill_attention_paged(
         q, k, v, pool_k, pool_v, bt, starts, win_arr, fmt_kv=fmt,
-        hist_k=hk, hist_v=hv, page_ok=owned)
+        hist_pool_k=pool_k, hist_pool_v=pool_v, hist_bt=bt, page_ok=owned)
 
     np.testing.assert_array_equal(np.asarray(attn), np.asarray(full_attn))
     own = np.asarray(bt[0])[np.asarray(bt[0]) > 0]
@@ -208,8 +212,15 @@ def test_span_gate_matches_flash_chunk():
 def test_span_gate_boundaries():
     assert paged.fused_prefill_span_ok(6, 4, 8)          # 24 + 8 <= 1024
     assert paged.fused_prefill_span_ok(63, 16, 16)       # 1008 + 16 == 1024
-    assert not paged.fused_prefill_span_ok(63, 16, 17)   # one past the chunk
-    assert not paged.fused_prefill_span_ok(128, 16, 64)  # multi-chunk span
+    # spans past one flash chunk stream history page-by-page in the
+    # kernel — admitted whenever the page size tiles FLASH_CHUNK exactly
+    assert paged.fused_prefill_span_ok(63, 16, 17)
+    assert paged.fused_prefill_span_ok(128, 16, 64)
+    assert paged.fused_prefill_span_ok(4096, 4, 128)
+    # a non-dividing page size only passes while the whole span still
+    # fits a single flash pass
+    assert paged.fused_prefill_span_ok(3, 48, 16)        # 144 + 16 <= 1024
+    assert not paged.fused_prefill_span_ok(30, 48, 17)   # 48 doesn't tile
 
 
 # ---------------------------------------------------------------------------
@@ -223,8 +234,8 @@ _QUANTS = {"f32": QuantPolicy(),
            "coded": QuantPolicy(weights=P16_2, kv_cache=P8_2)}
 
 
-def _serve(cfg, params, prompts, fused):
-    engine = ServingEngine(cfg, params, batch_slots=2, max_seq=32,
+def _serve(cfg, params, prompts, fused, max_seq=32):
+    engine = ServingEngine(cfg, params, batch_slots=2, max_seq=max_seq,
                            fused_prefill=fused)
     for i, p in enumerate(prompts):
         engine.submit(Request(rid=i, prompt=p, max_new_tokens=3))
@@ -249,6 +260,37 @@ def test_engine_token_parity_fused_vs_decomposed(family, qname):
     assert sf["prefill_chunks"] == sd["prefill_chunks"] > 0
     assert sf["prefill_device_programs"] == sf["prefill_chunks"]
     assert sd["prefill_device_programs"] == 3 * sd["prefill_chunks"]
+
+
+@pytest.mark.parametrize("family", sorted(_ARCHS))
+@pytest.mark.parametrize("qname", sorted(_QUANTS))
+def test_long_prompt_needle_token_parity(family, qname, monkeypatch):
+    """Needle-style long prompts: with FLASH_CHUNK shrunk to 16, a
+    53-token prompt spans >= 3 flash chunks of streamed history, and the
+    fused path must stay token-identical to the decomposed one — for the
+    base prompt AND with the needle token near the start flipped (so the
+    earliest streamed chunk provably reaches the decode logits the same
+    way on both paths) — while every prefill chunk stays ONE device
+    program."""
+    monkeypatch.setattr(paged, "FLASH_CHUNK", 16)
+    rng = np.random.default_rng(3)
+    cfg = configs.get_tiny_serving(_ARCHS[family], _QUANTS[qname])
+    params = api.init(jax.random.key(0), cfg)
+    n = 3 * paged.FLASH_CHUNK + 5
+    needle = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    short = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    flipped = needle.copy()
+    flipped[1] = (needle[1] + 1) % cfg.vocab_size
+    for long_prompt in (needle, flipped):
+        out_f, eng_f = _serve(cfg, params, [long_prompt, short], fused=True,
+                              max_seq=64)
+        out_d, eng_d = _serve(cfg, params, [long_prompt, short], fused=False,
+                              max_seq=64)
+        assert out_f == out_d
+        sf, sd = eng_f.execution_summary(), eng_d.execution_summary()
+        assert sf["prefill_chunks"] == sd["prefill_chunks"] > 0
+        assert sf["prefill_device_programs"] == sf["prefill_chunks"]
+        assert sd["prefill_device_programs"] == 3 * sd["prefill_chunks"]
 
 
 def test_engine_counter_follows_span_gate():

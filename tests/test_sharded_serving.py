@@ -473,10 +473,11 @@ def test_merge_partials_matches_full_kernel_mq():
 
 def test_mesh_engine_fused_prefill_slot_spanning_all_shards():
     """One long prompt whose pages land on every shard, prefilled through
-    the fused dense-history kernel (the default): the 2-device stream
-    must be token-identical to the 1-device engine running the
-    *decomposed* prefill path — crossing both the fused/decomposed and
-    the sharded/unsharded boundaries at once — and the slot's pages must
+    the fused global-pool kernel (the default — history pages stream from
+    the all-gathered pool by global id): the 2-device stream must be
+    token-identical to the 1-device engine running the *decomposed*
+    prefill path — crossing both the fused/decomposed and the
+    sharded/unsharded boundaries at once — and the slot's pages must
     actually occupy both shards mid-flight."""
     out = _run("""
         import jax, numpy as np
@@ -518,3 +519,58 @@ def test_mesh_engine_fused_prefill_slot_spanning_all_shards():
         print("SPAN-OK", by_shard)
     """)
     assert "SPAN-OK" in out
+
+
+def test_mesh_engine_long_prompt_multi_chunk_fused_parity():
+    """Needle-style long prompt spanning >= 3 flash chunks of streamed
+    history on a 2-device mesh: with paged.FLASH_CHUNK shrunk to 16, a
+    53-token prompt forces the fused prefill kernel through multiple
+    in-kernel flash softmax steps over all-gathered history pages while
+    the fused decode epilogue runs each step as ONE device program.  The
+    stream must be token-identical to the 1-device fully-decomposed
+    engine, for the base prompt and with the needle token flipped."""
+    out = _run("""
+        import jax, numpy as np
+        from repro import configs
+        from repro.core.formats import P8_2, P16_2
+        from repro.core.quant import QuantPolicy
+        from repro.models import api, paged
+        from repro.serve import Request, ServingEngine
+        from repro.launch.mesh import make_serving_mesh
+
+        paged.FLASH_CHUNK = 16  # page_size 16 divides it: fused gate holds
+        cfg = configs.get_tiny_serving(
+            "command_r_35b", QuantPolicy(weights=P16_2, kv_cache=P8_2))
+        params = api.init(jax.random.key(0), cfg)
+        rng = np.random.default_rng(11)
+        needle = rng.integers(0, cfg.vocab_size,
+                              3 * paged.FLASH_CHUNK + 5).astype(np.int32)
+        flipped = needle.copy()
+        flipped[1] = (needle[1] + 1) % cfg.vocab_size
+
+        def run(mesh, fused, prompt):
+            eng = ServingEngine(cfg, params, batch_slots=1, max_seq=64,
+                                mesh=mesh, fused_prefill=fused,
+                                fused_decode=fused)
+            eng.submit(Request(rid=0, prompt=prompt.copy(),
+                               max_new_tokens=4))
+            done = eng.run()
+            assert len(done) == 1
+            return list(done[0].out_tokens), eng.execution_summary()
+
+        mesh = make_serving_mesh(2)
+        for prompt in (needle, flipped):
+            ref, s_ref = run(None, False, prompt)
+            got, s = run(mesh, True, prompt)
+            assert got == ref, (got, ref)
+            assert s["fused_prefill"] and s["fused_decode"]
+            assert s["prefill_chunks"] == s_ref["prefill_chunks"] > 0
+            assert s["prefill_device_programs"] == s["prefill_chunks"]
+            assert s_ref["prefill_device_programs"] == \\
+                3 * s_ref["prefill_chunks"]
+            assert s["decode_device_programs"] == s["decode_steps"]
+            assert s_ref["decode_device_programs"] == \\
+                2 * s_ref["decode_steps"]
+        print("NEEDLE-OK")
+    """)
+    assert "NEEDLE-OK" in out
