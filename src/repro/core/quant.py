@@ -202,6 +202,25 @@ class QuantPolicy:
         bandwidth (int8/int16 instead of f32 into the MXU tiles)."""
         return dataclasses.replace(self, activations=fmt, execution="fused")
 
+    def with_draft(self, weights: Optional[PositFormat] = None,
+                   execution: str = "fake_quant") -> "QuantPolicy":
+        """Speculative-draft policy derived from this serving policy.
+
+        `kv_cache` and `kv_page_size` are kept identical — the draft model
+        writes (placeholder) codes into the very pages the target verify
+        pass re-encodes and attends, so draft/verify agree on every page
+        address and code width and speculative acceptance is exact by
+        construction, never approximate.  Only the compute side gets
+        cheaper: `execution` defaults to the fake_quant stand-in (plain
+        f32 dots over fake-quantized masters — no packed-kernel launches
+        on the draft path) and `weights` may narrow the draft's weight
+        code (e.g. P(8, 0) via the plan table) for a bandwidth-bound
+        draft."""
+        return dataclasses.replace(
+            self,
+            weights=weights if weights is not None else self.weights,
+            execution=execution)
+
     def pdpu_config(self) -> PDPUConfig:
         """PDPU instance for the bit_exact plan: inputs in the weights
         format, accumulator/output in the paper's wider P(16,es)."""

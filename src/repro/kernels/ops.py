@@ -61,6 +61,30 @@ def _largest_divisor(n: int, cap: int) -> int:
     return 1
 
 
+# Smallest tile a cached launch param may degrade to before the resolver
+# gives up on it.  A cached tile that doesn't divide the live dim degrades
+# to the largest divisor below it (any tiling is value-neutral), but for a
+# prime live dim that collapses to 1 — a one-element-per-program launch
+# grid that is strictly worse than the kernel's own untuned default.
+_TILE_FLOOR = 2
+
+
+def _degrade_tile(n: int, cap: int | None) -> int | None:
+    """Resolve a cached tile `cap` against live dim `n`.
+
+    Returns a divisor of n to launch with, or None to mean "drop the cached
+    value and let the kernel's untuned default apply".  The cached tile is
+    kept when it divides n; otherwise it degrades to the largest divisor of
+    n below it, unless that divisor falls under `_TILE_FLOOR` (while n
+    itself is larger) — the pathological prime-dim collapse."""
+    if cap is None:
+        return None
+    d = _largest_divisor(n, cap)
+    if d < min(_TILE_FLOOR, int(n)):
+        return None
+    return d
+
+
 def _flat2d(shape):
     """The codec kernels collapse leading dims: lookup on the (R, C) the
     kernel actually launches."""
@@ -151,11 +175,11 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, window,
             (q.shape[0], q.shape[1], block_tables.shape[1],
              k_pages.shape[1], k_pages.shape[2]),
             (fmt_kv,), {}, ("t_block",))
-        tb = kw.get("t_block")
         # a cached t_block that doesn't divide this launch's T degrades to
-        # the largest divisor of T below it (any tiling is value-neutral),
-        # rather than dropping to untiled
-        t_block = _largest_divisor(q.shape[1], tb) if tb is not None else None
+        # the largest divisor of T below it (any tiling is value-neutral);
+        # if that collapses below _TILE_FLOOR (prime T), the cached value is
+        # dropped and the kernel's untuned default applies instead
+        t_block = _degrade_tile(q.shape[1], kw.get("t_block"))
     return paged_attention_mod.paged_attention(
         q, k_pages, v_pages, block_tables, lengths, window,
         fmt_kv=fmt_kv, softcap_val=softcap_val, interpret=_interpret(),
@@ -201,14 +225,16 @@ def decode_sample(x, w, noise=None, temperature=None, *, plan: str = "fused",
     and the engine sampler as separate device programs.  `v_block` resolves
     through the autotune cache (0 = whole vocab / collapsed grid); a cached
     tile that doesn't divide this vocab degrades to the largest divisor
-    below it, like `paged_attention`'s t_block."""
+    below it, like `paged_attention`'s t_block, and is dropped in favour of
+    the untuned whole-vocab default when that collapses below the tile
+    floor (prime vocab)."""
     V = w.shape[0] if transpose else w.shape[1]
     if v_block is None:
         kw = _resolve("decode_sample", (x.shape[0], x.shape[1], V),
                       (fmt_w,), {}, ("v_block",))
         vb = kw.get("v_block")
         if vb is not None:
-            v_block = V if vb == 0 else _largest_divisor(V, vb)
+            v_block = V if vb == 0 else _degrade_tile(V, vb)
     return paged_attention_mod.decode_sample(
         x, w, noise, temperature, plan=plan, fmt_w=fmt_w,
         transpose=transpose, greedy=greedy, top_k=top_k,

@@ -2,6 +2,22 @@
 
     python -m repro.launch.serve --arch gemma3_4b --smoke --requests 8 \
         --quant serve_p16_kv8
+
+Posit-native speculative decoding (draft policy proposes k tokens, one
+batched multi-query verify dispatch commits the matching prefix — token
+streams stay bitwise identical to plain decode):
+
+    python -m repro.launch.serve --arch gemma3_4b --smoke --requests 8 \
+        --quant serve_fused_p16 --speculate 4
+
+Async front end — SLO classes, deadlines, preemption, per-token
+streaming callbacks, TTFT/ITL histograms — lives in
+`repro.serve.AsyncServingFrontend`; `examples/serve_async.py` is the
+runnable walkthrough (mixed interactive/batch queue, a mid-flight
+high-priority arrival preempting a batch slot, streaming dedup across
+the replay, speculation on top):
+
+    PYTHONPATH=src python examples/serve_async.py
 """
 from __future__ import annotations
 
@@ -38,6 +54,9 @@ def main():
     ap.add_argument("--mesh-model", type=int, default=0,
                     help="shard the paged KV pool over this many devices "
                          "(0 = single-device pool)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="speculative decoding span k (>= 2; draft policy "
+                         "= quant.with_draft(), bitwise-identical tokens)")
     args = ap.parse_args()
     if not args.sample and (args.temperature != 1.0 or args.top_k):
         raise SystemExit("--temperature/--top-k only take effect with "
@@ -57,7 +76,7 @@ def main():
                            page_size=args.page_size,
                            greedy=not args.sample,
                            temperature=args.temperature, top_k=args.top_k,
-                           mesh=mesh)
+                           speculate_k=args.speculate, mesh=mesh)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(Request(
@@ -75,6 +94,12 @@ def main():
     print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s) kv dtype="
           f"{'posit' if cfg.quant.kv_cache else cfg.dtype} cache={layout}")
+    if args.speculate:
+        s = engine.execution_summary()
+        print(f"[serve] speculation: k={s['speculate_k']} "
+              f"rounds={s['speculation_rounds']} "
+              f"accept_rate={s['speculation_accept_rate']:.3f} "
+              f"committed={s['speculation_committed_tokens']}")
     if engine.paged and engine.n_shards > 1:
         occ = engine.allocator.pages_in_use_by_shard
         per = engine.allocator.pages_per_shard - 1

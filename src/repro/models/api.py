@@ -95,6 +95,32 @@ def decode_and_sample(params, tokens, cache, cfg: ModelConfig, noise,
                                  sample=spec)
 
 
+def decode_verify(params, tokens, cache, cfg: ModelConfig, noise,
+                  temperature, *, greedy: bool, top_k: int, shard=None):
+    """k-token speculative verify: tokens [B, T] (committed next token +
+    T-1 draft proposals per slot) run as ONE batched multi-query paged-
+    attention dispatch under the serve policy.  Returns ([B, T] int32
+    target tokens, cache' with length + T) — row (b, j) is bitwise the
+    token T sequential `decode_and_sample` calls would have emitted at
+    that position given the same inputs, so callers accept the longest
+    draft prefix that matches and roll back the rest on the host.
+
+    noise: [B*T, V] f32 gumbel rows from `sample_noise` over per-(slot,
+    draw-index) keys, b-major (None when greedy); temperature: f32 scalar
+    (ignored when greedy)."""
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    mod = _mod(cfg)
+    if not hasattr(mod, "decode_verify"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no k-token verify step")
+    from . import common
+    spec = common.SampleSpec(noise=noise, temperature=temperature,
+                             greedy=greedy, top_k=top_k)
+    return mod.decode_verify(params, tokens, cache, cfg, shard=shard,
+                             sample=spec)
+
+
 def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):
     """Process one prompt chunk [1, C] for one slot of a serving cache
     (dense or paged) at positions length[slot] + [0, C).  The serving

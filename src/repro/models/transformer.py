@@ -588,6 +588,77 @@ def _decode_step_paged(params, tokens, cache, cfg: ModelConfig, shard=None,
     return logits[:, 0], new_cache
 
 
+def decode_verify(params, tokens, cache, cfg: ModelConfig, shard=None,
+                  sample=None):
+    """k-token speculative verify over the paged cache.
+
+    tokens: [B, T] int32 — per slot the already-committed next token
+    followed by T-1 draft proposals.  Per layer the T tokens' KV codes are
+    scattered into the slot's pages (positions length + [0, T), exactly
+    what T sequential decode steps would write) and ONE multi-query
+    paged-attention launch attends all T query rows.  This is bitwise
+    identical to T sequential `decode_step` calls over the same tokens:
+    the MQ kernel masks pos <= q_pos, and each inserted key is the
+    *quantized* code the sequential step would have written — and read —
+    itself (decode semantics: a token always attends its own coded KV,
+    unlike prefill-chunk intra-chunk attention which sees raw values).
+
+    Returns ([B, T] int32 target tokens when `sample` is set, else
+    [B, T, V] logits, and cache' with length advanced by T).  Callers
+    commit the accepted prefix and roll `length` back on the host;
+    positions past the committed count hold rejected-draft codes but sit
+    at/after the new length, so no later read ever sees them before the
+    next write."""
+    if "block_table" not in cache:
+        raise ValueError("decode_verify requires a paged cache")
+    if shard is not None:
+        raise NotImplementedError(
+            "speculative verify over a sharded page pool is not wired up")
+    B, T = tokens.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = common.embed_tokens(params["embed"], tokens, cfg)
+    length = cache["length"]
+    bt = cache["block_table"]
+    flags = layer_flags(cfg)
+    pos = length[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+
+    def body(x, xs):
+        p, is_global, k_l, v_l = xs
+        h = common.rms_norm(x, p["ln1"], upcast=not cfg.tp_bf16_reduce)
+        q = common.qdot(h, p["wq"], cfg.quant).reshape(B, T, Hq, Dh)
+        k = common.qdot(h, p["wk"], cfg.quant).reshape(B, T, Hkv, Dh)
+        v = common.qdot(h, p["wv"], cfg.quant).reshape(B, T, Hkv, Dh)
+        if cfg.qk_norm and "q_norm" in p:
+            q = common.rms_norm(q, p["q_norm"])
+            k = common.rms_norm(k, p["k_norm"])
+        q = common.rope(q, pos, cfg.rope_theta)
+        k = common.rope(k, pos, cfg.rope_theta)
+        k_new = paged.insert_chunk_batched(
+            k_l, bt, length, common.kv_encode(cfg, k.reshape(B, T, -1)))
+        v_new = paged.insert_chunk_batched(
+            v_l, bt, length, common.kv_encode(cfg, v.reshape(B, T, -1)))
+        attn = ops.paged_attention(
+            q, k_new, v_new, bt, length + T, _window_arr(cfg, is_global),
+            fmt_kv=cfg.quant.kv_cache, softcap_val=cfg.logit_softcap)
+        out = common.qdot(attn.reshape(B, T, Hq * Dh).astype(x.dtype),
+                          p["wo"], cfg.quant)
+        x = x + out
+        x = x + _mlp_block(p, x, cfg)
+        return x, (k_new, v_new)
+
+    x, (k_c, v_c) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"]))
+    x = common.rms_norm(x, params["final_norm"])
+    new_cache = {"k": k_c, "v": v_c, "block_table": bt, "length": length + T}
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    if sample is not None:
+        toks = common.sample_head(x.reshape(B * T, -1), head, cfg, sample,
+                                  transpose=cfg.tie_embeddings)
+        return toks.reshape(B, T), new_cache
+    logits = common.logits_head(x, head, cfg, transpose=cfg.tie_embeddings)
+    return logits, new_cache
+
+
 def prefill_chunk(params, tokens, cache, slot, cfg: ModelConfig, shard=None):
     """Chunked prefill: process prompt chunk `tokens` [1, C] for one slot.
 

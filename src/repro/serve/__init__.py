@@ -1,4 +1,9 @@
 """Serving: shared-prefix paged posit-KV runtime — refcounted block-table
 cache with copy-on-write prefix sharing, batched cross-slot chunked
-prefill, continuous batching (see engine.py)."""
+prefill, continuous batching (engine.py), an asyncio front end with SLO
+classes, deadlines, preemption, and streaming callbacks (frontend.py),
+and posit-native speculative decoding (draft policy + one-dispatch
+multi-query verify over the same coded pages)."""
 from .engine import ServingEngine, Request, PageAllocator  # noqa: F401
+from .frontend import (AsyncServingFrontend, SLOClass, Ticket,  # noqa: F401
+                       DeadlineExceeded, INTERACTIVE, BATCH)

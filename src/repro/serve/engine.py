@@ -80,6 +80,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
+from repro.models import paged as paged_mod
 from repro.models.config import ModelConfig
 from repro.models.paged import (PagedLayout, PageShard, fork_page,
                                 fused_prefill_span_ok)
@@ -247,6 +248,9 @@ class ServingEngine:
                  batched_prefill: Optional[bool] = None,
                  fused_prefill: Optional[bool] = None,
                  fused_decode: Optional[bool] = None,
+                 speculate_k: int = 0,
+                 draft_quant=None,
+                 draft_params=None,
                  mesh=None):
         """batch_slots decode slots over a max_seq position budget per slot.
 
@@ -285,6 +289,19 @@ class ServingEngine:
         keep global page ids, and allocation prefers single-shard slots
         (prefix donors' shards for shared chains) before spilling.
         Dense-cache and SSM-family engines ignore the mesh.
+
+        speculate_k >= 2 turns on posit-native speculative decoding: a
+        cheap draft policy (`draft_quant`, default
+        `cfg.quant.with_draft()`; `draft_params` defaults to the serve
+        weights) proposes up to k-1 tokens per round, all verified in ONE
+        batched multi-query `ops.paged_attention` dispatch against the
+        serve policy.  Draft and verify read/write the *same* posit-coded
+        KV pages (with_draft pins kv_cache + kv_page_size), and the verify
+        pass re-encodes every proposed position with the serve policy's
+        codes before attending, so the accepted token stream is bitwise
+        identical to plain decode over the same seeds — speculation only
+        changes how many device programs that stream costs.  Paged
+        single-shard attention families only.
         """
         if fused_prefill is not None:
             cfg = dataclasses.replace(
@@ -324,9 +341,10 @@ class ServingEngine:
                 self.mesh = mesh
                 self._shard_axis = axes[0]
                 n_shards = mesh.shape[axes[0]]
+        self.prefill_buckets = self._valid_buckets(prefill_buckets)
         self.layout = None
         if paged:
-            ps = cfg.quant.kv_page_size if page_size is None else page_size
+            ps = self._resolve_page_size(page_size, max_seq)
             self.layout = PagedLayout.for_slots(batch_slots, max_seq, ps,
                                                 n_pages, n_shards=n_shards)
         self.cache = api.init_cache(cfg, batch_slots, max_seq, self.layout)
@@ -363,7 +381,6 @@ class ServingEngine:
         # loop); bit_exact has no fused head replay.
         self.fused_decode = (self.paged and bool(q.fused_decode)
                              and q.execution != "bit_exact")
-        self.prefill_buckets = self._valid_buckets(prefill_buckets)
         if self.n_shards > 1:
             self._install_sharded_fns()
         else:
@@ -422,7 +439,10 @@ class ServingEngine:
         self.stats = {"pages_shared": 0, "shared_admissions": 0,
                       "cow_forks": 0, "prefill_batch_sizes": {},
                       "prefill_chunks": 0, "prefill_device_programs": 0,
-                      "decode_steps": 0, "decode_device_programs": 0}
+                      "decode_steps": 0, "decode_device_programs": 0,
+                      "preemptions": 0, "spec_rounds": 0,
+                      "spec_draft_tokens": 0, "spec_accepted_tokens": 0,
+                      "spec_committed_tokens": 0}
 
         # batch-dim index per cache leaf, for restoring rows of slots that
         # were mid-prefill during a decode call (page pools have no batch
@@ -436,6 +456,52 @@ class ServingEngine:
         # prefix sharing must snapshot/restore at the shared boundary
         self._recurrent = any(name not in _META for name in self.cache)
 
+        # ---- speculative decoding (draft-propose / batched-verify) ----
+        self.speculate_k = int(speculate_k)
+        self.draft_quant = None
+        self._spec_dummy_keys: Dict[int, object] = {}
+        if self.speculate_k:
+            if self.speculate_k < 2:
+                raise ValueError("speculate_k must be >= 2 (k=1 is plain "
+                                 "decode); pass 0 to disable speculation")
+            if not self.paged:
+                raise ValueError("speculative decoding requires the paged "
+                                 "KV cache (draft and verify must address "
+                                 "the same posit-coded pages)")
+            if self._recurrent:
+                raise ValueError(
+                    "speculative decoding is limited to pure-attention "
+                    "paged families: recurrent (conv/SSM) state cannot be "
+                    "rolled back when a draft token is rejected")
+            if self.n_shards > 1:
+                raise ValueError("speculative decoding is not implemented "
+                                 "for sharded page pools yet")
+            if not hasattr(api._mod(cfg), "decode_verify"):
+                raise ValueError(f"family {cfg.family!r} has no k-token "
+                                 f"verify step")
+            dq = draft_quant if draft_quant is not None else \
+                cfg.quant.with_draft()
+            if (dq.kv_cache != cfg.quant.kv_cache
+                    or dq.kv_page_size != cfg.quant.kv_page_size):
+                raise ValueError(
+                    "draft policy must keep the serve policy's kv_cache "
+                    "format and kv_page_size — draft and target decode "
+                    "the same posit-coded pages, which is what makes "
+                    "speculative acceptance exact (QuantPolicy.with_draft "
+                    "preserves both)")
+            self.draft_quant = dq
+            draft_cfg = dataclasses.replace(cfg, quant=dq)
+            self.draft_params = params if draft_params is None else \
+                draft_params
+            self._draft_decode = jax.jit(
+                lambda p, t, c: api.decode_step(p, t, c, draft_cfg))
+            gd, tk, V = greedy, self.top_k, cfg.vocab_size
+            self._verify = jax.jit(
+                lambda p, t, c, keys, temp: api.decode_verify(
+                    p, t, c, cfg,
+                    None if gd else api.sample_noise(keys, V),
+                    temp, greedy=gd, top_k=tk))
+
     def _valid_buckets(self, buckets):
         """Descending chunk sizes; 1 is always included (exact prompt
         decomposition), and sizes incompatible with the SSD chunk length
@@ -445,6 +511,41 @@ class ServingEngine:
             q = self.cfg.ssm_chunk
             out = {b for b in out if b <= q or b % q == 0}
         return tuple(sorted(out, reverse=True))
+
+    def _resolve_page_size(self, requested: Optional[int],
+                           max_seq: int) -> int:
+        """Page size the paged layout is actually built with.
+
+        With fused prefill on, a page size that neither tiles
+        paged.FLASH_CHUNK nor keeps every possible prefill span inside one
+        flash chunk would silently drop every chunk onto the 3-program
+        decomposed path (fused_prefill_span_ok) — the exact quiet fallback
+        the ROADMAP carried as a residual.  An explicitly requested size
+        that cannot hold the one-program gate raises; the policy default
+        (page_size=None) auto-picks the largest FLASH_CHUNK divisor not
+        above cfg.quant.kv_page_size instead, so the fused path is never
+        lost to a configuration accident."""
+        q = self.cfg.quant
+        ps = int(q.kv_page_size if requested is None else requested)
+        if ps < 1:
+            raise ValueError(f"page_size must be >= 1, got {ps}")
+        if not q.fused_prefill or self.cfg.family == "ssm":
+            return ps  # no paged attention prefill to keep fused
+        chunk = paged_mod.FLASH_CHUNK  # read live: tests/CI retune it
+        per = -(-max_seq // ps)
+        if fused_prefill_span_ok(per, ps, max(self.prefill_buckets)):
+            return ps
+        if requested is not None:
+            raise ValueError(
+                f"page_size={ps} cannot tile FLASH_CHUNK={chunk} and the "
+                f"slot span ({per} pages x {ps} + a "
+                f"{max(self.prefill_buckets)}-token chunk) exceeds one "
+                f"flash chunk: every prefill chunk would silently fall "
+                f"back to the 3-program decomposed path.  Pass a divisor "
+                f"of {chunk} (or page_size=None to auto-pick one), or "
+                f"construct with fused_prefill=False to accept the "
+                f"decomposed path explicitly")
+        return max(d for d in range(1, ps + 1) if chunk % d == 0)
 
     def _install_sharded_fns(self):
         """Wrap the serving entry points in a fully-manual shard_map over
@@ -662,6 +763,16 @@ class ServingEngine:
             "decode_device_programs": self.stats["decode_device_programs"],
             "pages_shared_mapped": self.pages_shared_mapped,
             "cow_forks": self.stats["cow_forks"],
+            "preemptions": self.stats["preemptions"],
+            "speculative": bool(self.speculate_k),
+            "speculate_k": self.speculate_k or None,
+            "speculation_rounds": self.stats["spec_rounds"],
+            "speculation_committed_tokens":
+                self.stats["spec_committed_tokens"],
+            "speculation_accept_rate": (
+                self.stats["spec_accepted_tokens"]
+                / self.stats["spec_draft_tokens"]
+                if self.stats["spec_draft_tokens"] else None),
         }
 
     # ------------------------------------------------------------------
@@ -718,12 +829,14 @@ class ServingEngine:
             - int(self.slot_cursor[slot])
         return self._chunk_sizes(remaining)[0]
 
-    def _refresh_meta(self, cache, mask=None):
+    def _refresh_meta(self, cache, mask=None, lengths=None):
         """Push host-owned lengths/block tables into the device cache.
         mask zeroes rows of slots that must not touch real state during a
         batched call (free / mid-prefill slots in decode, non-group slots
-        in batched prefill)."""
-        lengths = self.lengths.copy()
+        in batched prefill).  lengths overrides the host array (the
+        speculative draft loop advances a transient per-slot position
+        without committing it)."""
+        lengths = (self.lengths if lengths is None else lengths).copy()
         if mask is not None:
             lengths[~mask] = 0
         cache = dict(cache)
@@ -1154,6 +1267,39 @@ class ServingEngine:
         self.done.append(self.slot_req[slot])
         self._release(slot)
 
+    def preempt(self, slot: int) -> Optional[Request]:
+        """Evict a mid-flight slot and requeue its request at the head of
+        the queue; returns the requeued request (None for a free slot).
+
+        The request is requeued BEFORE the slot releases so _release sees
+        its own registered prompt pages as wanted-by-queue and turns them
+        into engine holds instead of recycling them — on re-admission the
+        prefix lookup maps those pages straight back and only the unshared
+        tail re-prefills.  Emitted tokens are discarded and replayed: the
+        sampling keys derive from (seed, draw index), so the rerun emits
+        the identical stream regardless of when the preemption landed.
+        Front ends that streamed tokens out already must dedup by count."""
+        if self.slot_phase[slot] == _FREE:
+            return None
+        req = self.slot_req[slot]
+        req.out_tokens = []
+        self.queue.insert(0, req)
+        self._release(slot)
+        self.stats["preemptions"] += 1
+        return req
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a queued (not yet admitted) request.  Holds that only this
+        request's prefix was keeping alive are pruned immediately — a
+        cancelled request must not pin pages."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                self.queue.pop(i)
+                if self.paged:
+                    self._prune_holds()
+                return True
+        return False
+
     # ------------------------------------------------------------------
     # prefill progression
     # ------------------------------------------------------------------
@@ -1288,6 +1434,11 @@ class ServingEngine:
         decode_mask = self.slot_phase == _DECODE
         if not decode_mask.any():
             return bool((self.slot_phase == _PREFILL).any())
+        if self.speculate_k:
+            T = self._spec_span(decode_mask)
+            if T >= 2:
+                self._spec_round(decode_mask, T)
+                return True
         if self.paged:
             for s in np.nonzero(decode_mask)[0]:
                 pos = int(self.lengths[s])
@@ -1338,6 +1489,122 @@ class ServingEngine:
                     req.eos_id is not None and int(tok) == req.eos_id):
                 self._retire(slot)
         return True
+
+    # ------------------------------------------------------------------
+    # speculative decoding
+    # ------------------------------------------------------------------
+
+    def _spec_span(self, decode_mask) -> int:
+        """Tokens per speculative round this iteration.  Capped by the
+        addressable tail of every live slot (a write past the block-table
+        row would clip-wrap onto the slot's last page — insert_tokens/
+        insert_chunk_batched clamp the page index) and by the longest
+        remaining budget (drafting past every slot's budget is wasted
+        work).  A span < 2 falls back to plain decode."""
+        cap = self.max_pages_per_slot * self.layout.page_size
+        slots = np.nonzero(decode_mask)[0]
+        head = min(cap - int(self.lengths[s]) for s in slots)
+        rem = max(int(self.slot_remaining[s]) for s in slots)
+        return min(self.speculate_k, head, rem)
+
+    def _spec_verify_keys(self, decode_mask, T: int, base):
+        """Row keys for the verify dispatch, b-major to match the verify
+        head's [B*T] row order: row (s, j) samples target token t_j with
+        the key the plain decode loop would use for that very draw
+        (fold_in(slot key, base + j)) — parity of the committed stream
+        follows key-for-key."""
+        if self.greedy:
+            keys = self._spec_dummy_keys.get(T)
+            if keys is None:
+                keys = jax.random.split(self._base_key, self.B * T)
+                self._spec_dummy_keys[T] = keys
+            return keys
+        return jnp.stack([
+            jax.random.fold_in(self._slot_keys[s], base[s] + j)
+            if decode_mask[s] else self._dummy_keys[0]
+            for s in range(self.B) for j in range(T)])
+
+    def _spec_round(self, decode_mask, T: int):
+        """One speculative round over every decoding slot: T-1 draft
+        proposals (cheap draft policy, plain decode steps) followed by ONE
+        batched multi-query verify under the serve policy.  The verify
+        re-encodes all T positions with the serve policy's KV codes before
+        attending, so a committed token stream is bitwise identical to
+        plain decode — only draws that commit advance the per-slot key
+        counter, and lengths roll forward by exactly the committed count.
+        """
+        slots = [int(s) for s in np.nonzero(decode_mask)[0]]
+        base = {s: int(self._slot_sampled[s]) for s in slots}
+        for s in slots:
+            pos = int(self.lengths[s])
+            self._ensure_writable(s, pos, pos + T)
+        inputs = np.zeros((self.B, T), np.int32)
+        inputs[:, 0] = self.next_token
+        # ---- draft: propose d_1 .. d_{T-1}.  d_j guesses the target's
+        # j-th draw, so it samples with that draw's key (base + j - 1) —
+        # a draft whose logits match the target bitwise accepts 100%.
+        cur = jnp.asarray(self.next_token)
+        cache = self._refresh_meta(self.cache, decode_mask)
+        pool = self.cache
+        for j in range(1, T):
+            logits, pool = self._draft_decode(self.draft_params, cur, cache)
+            if self.greedy:
+                keys = self._dummy_keys
+            else:
+                keys = jnp.stack([
+                    jax.random.fold_in(self._slot_keys[s],
+                                       base[s] + j - 1)
+                    if decode_mask[s] else self._dummy_keys[0]
+                    for s in range(self.B)])
+            toks = np.asarray(
+                self._sampler(logits, keys, jnp.float32(self.temperature)),
+                np.int32)
+            inputs[:, j] = toks
+            cur = jnp.asarray(toks)
+            if j < T - 1:
+                drafted = self.lengths + np.where(
+                    decode_mask, j, 0).astype(np.int32)
+                cache = self._refresh_meta(pool, decode_mask,
+                                           lengths=drafted)
+        # the draft's page writes are placeholders: the verify pass below
+        # re-inserts every one of the T positions with the serve policy's
+        # codes (per layer, before its attention reads them)
+        cache = self._refresh_meta(pool, decode_mask)
+        keys = self._spec_verify_keys(decode_mask, T, base)
+        toks_bt, self.cache = self._verify(
+            self.params, jnp.asarray(inputs), cache, keys,
+            jnp.float32(self.temperature))
+        toks = np.asarray(toks_bt, np.int32)
+        self.stats["spec_rounds"] += 1
+        self.stats["decode_steps"] += 1
+        # per draft token: one draft decode + one sampler dispatch
+        self.stats["decode_device_programs"] += 2 * (T - 1) + 1
+        for s in slots:
+            req = self.slot_req[s]
+            # accept the longest prefix whose drafts matched the verified
+            # targets: t_j is trustworthy iff inputs[1..j] == t[0..j-1]
+            n_acc = 1
+            while n_acc < T and inputs[s, n_acc] == toks[s, n_acc - 1]:
+                n_acc += 1
+            self.stats["spec_draft_tokens"] += T - 1
+            self.stats["spec_accepted_tokens"] += n_acc - 1
+            commit = []
+            for j in range(min(n_acc, int(self.slot_remaining[s]))):
+                t = int(toks[s, j])
+                commit.append(t)
+                if req.eos_id is not None and t == req.eos_id:
+                    break
+            c = len(commit)
+            req.out_tokens.extend(commit)
+            if not self.greedy:
+                self._slot_sampled[s] = base[s] + c
+            self.lengths[s] += c
+            self.next_token[s] = commit[-1]
+            self.slot_remaining[s] -= c
+            self.stats["spec_committed_tokens"] += c
+            if self.slot_remaining[s] <= 0 or (
+                    req.eos_id is not None and commit[-1] == req.eos_id):
+                self._retire(s)
 
     def run(self, max_iters: int = 10_000):
         it = 0

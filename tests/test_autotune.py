@@ -169,6 +169,69 @@ def test_largest_divisor_fallback():
     assert ops._largest_divisor(48, 32) == 24
 
 
+def test_degrade_tile_prime_dim_drops_cached_value():
+    """A cached tile facing a prime live dim must NOT collapse to a
+    1-element-per-program grid; the resolver drops it (None) so the
+    kernel's untuned default applies instead."""
+    assert ops._degrade_tile(6, 4) == 3        # degrades to a divisor
+    assert ops._degrade_tile(8, 4) == 4        # divides: kept as-is
+    assert ops._degrade_tile(7, 4) is None     # prime: dropped, not 1
+    assert ops._degrade_tile(13, 8) is None    # prime: dropped, not 1
+    assert ops._degrade_tile(1, 4) == 1        # dim 1: trivially exact
+    assert ops._degrade_tile(7, None) is None  # no cached value at all
+
+
+def test_ops_paged_prime_t_falls_back_to_untuned_default(scratch_cache):
+    """Regression: a cached t_block over a prime multi-query span used to
+    collapse to t_block=1 via _largest_divisor; it must instead drop to
+    the kernel's untuned default — and stay value-neutral."""
+    rng = np.random.default_rng(31)
+    B, T, Hq, Hkv, Dh, ps, M = 2, 5, 4, 2, 8, 4, 4  # T=5 prime
+    fmt = P16_1
+    n_pages = 1 + B * M
+    kp = jnp.asarray(rng.integers(0, 1 << fmt.n, (n_pages, ps, Hkv * Dh)),
+                     jnp.int32)
+    kp = jnp.where(kp == fmt.nar_code, 0, kp).astype(jnp.int16)
+    vp = jnp.asarray(rng.integers(0, 1 << fmt.n, (n_pages, ps, Hkv * Dh)),
+                     jnp.int32)
+    vp = jnp.where(vp == fmt.nar_code, 0, vp).astype(jnp.int16)
+    bt = jnp.asarray(1 + np.arange(B * M).reshape(B, M), jnp.int32)
+    lengths = jnp.asarray([6, 9], jnp.int32)
+    win = jnp.full((1,), 2 ** 30, jnp.int32)
+    q = jnp.asarray(rng.normal(0, 1, (B, T, Hq, Dh)), jnp.float32)
+    autotune.reset_cache(autotune.AutotuneCache())  # untuned default
+    want = ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=fmt)
+    c = autotune.AutotuneCache()
+    c.put("paged_attention", (B, T, M, ps, Hkv * Dh), {"t_block": 4},
+          fmts=(fmt,))
+    autotune.reset_cache(c)
+    got = ops.paged_attention(q, kp, vp, bt, lengths, win, fmt_kv=fmt)
+    assert c.hits.get("paged_attention", 0) >= 1
+    assert bool(jnp.all(got == want))
+
+
+def test_ops_decode_sample_prime_vocab_falls_back(scratch_cache):
+    """Regression companion for the fused decode epilogue: a cached
+    v_block over a prime vocab drops to the whole-vocab untuned default
+    instead of a 1-column grid — sampled tokens bitwise unchanged."""
+    rng = np.random.default_rng(32)
+    B, D, V = 3, 16, 47  # V=47 prime
+    x = jnp.asarray(rng.normal(0, 1, (B, D)), jnp.float32)
+    w = posit.pack(jnp.asarray(rng.normal(0, 1, (D, V)), jnp.float32), P16_2)
+    noise = jnp.asarray(rng.gumbel(size=(B, V)), jnp.float32)
+    temp = jnp.float32(0.7)
+    autotune.reset_cache(autotune.AutotuneCache())
+    want = ops.decode_sample(x, w, noise, temp, plan="fused", fmt_w=P16_2,
+                             top_k=5)
+    c = autotune.AutotuneCache()
+    c.put("decode_sample", (B, D, V), {"v_block": 32}, fmts=(P16_2,))
+    autotune.reset_cache(c)
+    got = ops.decode_sample(x, w, noise, temp, plan="fused", fmt_w=P16_2,
+                            top_k=5)
+    assert c.hits.get("decode_sample", 0) >= 1
+    assert bool(jnp.all(got == want))
+
+
 def test_ops_paged_rejects_nondividing_t_block(scratch_cache):
     """A cached t_block that doesn't divide this launch's T must degrade
     to the largest divisor of T below it, not crash the kernel — and the

@@ -401,6 +401,47 @@ def test_prefill_max_new_tokens_one_retires_at_fill(rng):
     assert len(done) == 1 and len(done[0].out_tokens) == 1
 
 
+def test_retire_at_prefill_refill_same_pass_key_stream_parity(rng):
+    """RNG regression guard: when a SAMPLED slot retires at prefill (one-
+    token budget, or eos on the prefill token) and the queue refills that
+    slot in the same _fill_slots pass, the refilled request's per-draw
+    fold_in stream must start at count 0 exactly as in a fresh engine —
+    identically on the fused decode epilogue and the decomposed one."""
+    from repro.models import api
+    from repro.serve import Request, ServingEngine
+
+    cfg = _tiny_cfg(policy_by_name("serve_fused_p16"))
+    params = api.pack_params(api.init(jax.random.key(0), cfg), cfg)
+    p0 = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+
+    def run(fused_decode, reqs):
+        eng = ServingEngine(cfg, params, batch_slots=1, max_seq=32,
+                            greedy=False, temperature=0.8, top_k=4,
+                            fused_decode=fused_decode)
+        for r in reqs:
+            eng.submit(Request(**{**r, "prompt": r["prompt"].copy()}))
+        return {r.rid: r.out_tokens for r in eng.run()}
+
+    tail = dict(rid=1, prompt=p1, max_new_tokens=4, seed=22)
+    ref = run(True, [tail])
+    assert run(False, [tail]) == ref  # fused epilogue: same fold_in keys
+
+    # (a) head retires via its one-token budget
+    head = dict(rid=0, prompt=p0, max_new_tokens=1, seed=11)
+    for fd in (True, False):
+        got = run(fd, [head, tail])
+        assert got[1] == ref[1], (fd, "budget retire skewed the refill")
+    # (b) head retires via eos ON the sampled prefill token
+    eos = run(True, [head])[0][0]
+    head_eos = dict(rid=0, prompt=p0, max_new_tokens=8, seed=11,
+                    eos_id=int(eos))
+    for fd in (True, False):
+        got = run(fd, [head_eos, tail])
+        assert got[0] == [eos]
+        assert got[1] == ref[1], (fd, "eos-at-prefill retire skewed keys")
+
+
 def test_unpack_params_inverts_to_quantized_masters(rng):
     """unpack(pack(w)) == quantize(w): the packed checkpoint holds exactly
     the quantized weights, no second rounding."""

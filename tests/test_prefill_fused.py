@@ -293,6 +293,71 @@ def test_long_prompt_needle_token_parity(family, qname, monkeypatch):
         assert sd["prefill_device_programs"] == 3 * sd["prefill_chunks"]
 
 
+# ---------------------------------------------------------------------------
+# page-size validation: no silent fall-off from the fused path
+# ---------------------------------------------------------------------------
+
+
+def test_engine_rejects_page_size_that_loses_fused_path(monkeypatch):
+    """Regression: a page size that neither tiles FLASH_CHUNK nor fits
+    every span in one flash pass used to build fine and then silently run
+    EVERY chunk through the 3-program decomposed path.  An explicitly
+    requested size like that must now raise at construction."""
+    monkeypatch.setattr(paged, "FLASH_CHUNK", 16)
+    cfg = configs.get_tiny_serving("command_r_35b",
+                                   QuantPolicy(kv_cache=P16_1))
+    params = api.init(jax.random.key(0), cfg)
+    with pytest.raises(ValueError, match="fused"):
+        ServingEngine(cfg, params, batch_slots=1, max_seq=64, page_size=12)
+    # the documented escape hatch: opt out of fused prefill entirely
+    eng = ServingEngine(
+        cfg, params.copy(), batch_slots=1, max_seq=64, page_size=12,
+        fused_prefill=False)
+    assert eng.layout.page_size == 12
+    assert eng._prefill_programs_per_chunk(8) == 3
+
+
+def test_engine_auto_picks_tiling_page_size(monkeypatch):
+    """With page_size unspecified, a policy default that would lose the
+    fused path degrades to the largest FLASH_CHUNK divisor below it —
+    and the engine then really does run one device program per chunk,
+    token-identical to the decomposed escape hatch."""
+    monkeypatch.setattr(paged, "FLASH_CHUNK", 16)
+    rng = np.random.default_rng(5)
+    cfg = configs.get_tiny_serving(
+        "command_r_35b", QuantPolicy(kv_cache=P16_1, kv_page_size=12))
+    params = api.init(jax.random.key(0), cfg)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (21, 6)]
+    eng = ServingEngine(cfg, params, batch_slots=2, max_seq=64)
+    assert eng.layout.page_size == 8  # largest divisor of 16 at/below 12
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=3))
+    got = {r.rid: r.out_tokens for r in eng.run()}
+    s = eng.execution_summary()
+    # the formerly-falling-back config now holds the one-program contract
+    assert s["prefill_device_programs"] == s["prefill_chunks"] > 0
+    out_d, eng_d = _serve(cfg, params, prompts, fused=False, max_seq=64)
+    assert got == out_d
+    sd = eng_d.execution_summary()
+    assert sd["prefill_device_programs"] == 3 * sd["prefill_chunks"]
+
+
+def test_engine_page_size_untouched_when_gate_holds():
+    """Sizes the span gate admits — tiling or small-span non-tiling —
+    pass through unchanged, requested or defaulted."""
+    cfg = configs.get_tiny_serving("command_r_35b",
+                                   QuantPolicy(kv_cache=P16_1))
+    params = api.init(jax.random.key(0), cfg)
+    # 48 doesn't tile FLASH_CHUNK=1024 but max_seq=32 spans one page:
+    # the whole span fits a single flash pass, so it stays legal
+    eng = ServingEngine(cfg, params, batch_slots=1, max_seq=32,
+                        page_size=48)
+    assert eng.layout.page_size == 48
+    eng2 = ServingEngine(cfg, params, batch_slots=1, max_seq=32)
+    assert eng2.layout.page_size == cfg.quant.kv_page_size
+
+
 def test_engine_counter_follows_span_gate():
     cfg = configs.get_tiny_serving("command_r_35b",
                                    QuantPolicy(kv_cache=P16_1))

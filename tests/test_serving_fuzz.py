@@ -236,6 +236,110 @@ def test_scheduler_fuzz_matches_dense_reference(q):
     assert all(not p for p in paged.slot_pages)
 
 
+def _events(data, reqs):
+    """A random schedule of mid-flight preemptions and queue cancels."""
+    evs = data.draw(st.lists(st.tuples(
+        st.integers(0, 25),                        # engine step to fire at
+        st.sampled_from(["preempt", "cancel"]),
+        st.integers(0, max(r["rid"] for r in reqs))),  # slot / rid source
+        min_size=1, max_size=4))
+    by_step = {}
+    for step, kind, x in evs:
+        by_step.setdefault(step, []).append((kind, x))
+    return by_step
+
+
+def _drive_with_events(eng, by_step):
+    """step() the engine to drain, firing scheduled preempt/cancel events;
+    returns the set of rids successfully cancelled while still queued."""
+    cancelled = set()
+    for step in range(500):
+        for kind, x in by_step.get(step, ()):
+            if kind == "preempt":
+                eng.preempt(x % eng.B)   # no-op on a free slot
+            elif eng.cancel(x):
+                cancelled.add(x)
+        if not eng.step() and not eng.queue:
+            break
+    else:
+        pytest.fail("engine did not drain under preemption fuzz")
+    return cancelled
+
+
+@given(q=_queues(), data=st.data())
+@settings(max_examples=6, deadline=None)
+def test_preemption_cancel_fuzz_matches_reference(q, data):
+    """Random mid-flight preemptions (requeue at head, discard + replay)
+    and queue cancellations never change a surviving request's stream:
+    sampling keys derive from (seed, draw index), so a replay is bitwise
+    the original run regardless of when the eviction landed.  Afterwards
+    the pool reclaims completely — no leaked pages and no orphaned holds
+    from cancelled requests (`cancel` prunes what only they wanted)."""
+    reqs, slack, chunks_per_step = q
+    cfg, params = _model()
+    max_need = max((len(r["prompt"]) + r["max_new_tokens"] - 2) // _PS + 1
+                   for r in reqs)
+    kw = dict(batch_slots=2, max_seq=32, prefill_buckets=(4, 1),
+              prefill_chunks_per_step=chunks_per_step,
+              page_size=_PS, n_pages=max_need + 1 + slack)
+    ref = ServingEngine(cfg, params, **kw)
+    eng = ServingEngine(cfg, params, **kw)
+    for e in (ref, eng):
+        for r in reqs:
+            e.submit(Request(**{**r, "prompt": r["prompt"].copy()}))
+    want = {r.rid: r.out_tokens for r in ref.run()}
+
+    cancelled = _drive_with_events(eng, _events(data, reqs))
+    got = {r.rid: r.out_tokens for r in eng.done}
+    assert set(got) == {r["rid"] for r in reqs} - cancelled
+    for rid, toks in got.items():
+        assert toks == want[rid], rid
+    assert eng.pages_in_use == 0 and eng.pages_free \
+        == eng.allocator.capacity
+    assert not eng.prefix_index and not eng._held
+    assert not eng.allocator._refs
+    assert all(not p for p in eng.slot_pages)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="sharded preemption fuzz needs >=2 devices")
+@given(q=_queues(), data=st.data())
+@settings(max_examples=4, deadline=None)
+def test_sharded_preemption_fuzz_reclaims_per_shard(q, data):
+    """The same preemption/cancel law on the 2-device mesh engine: token
+    streams of survivors match the unpreempted reference and EVERY shard's
+    page budget returns to full — preemption must release pages back onto
+    the shard that owns them."""
+    from repro.launch.mesh import make_serving_mesh
+
+    reqs, slack, chunks_per_step = q
+    cfg, params = _model()
+    max_need = max((len(r["prompt"]) + r["max_new_tokens"] - 2) // _PS + 1
+                   for r in reqs)
+    n_pages = max_need + 2 + slack
+    n_pages += n_pages % 2
+    kw = dict(batch_slots=2, max_seq=32, prefill_buckets=(4, 1),
+              prefill_chunks_per_step=chunks_per_step,
+              page_size=_PS, n_pages=n_pages)
+    ref = ServingEngine(cfg, params, mesh=make_serving_mesh(2), **kw)
+    eng = ServingEngine(cfg, params, mesh=make_serving_mesh(2), **kw)
+    for e in (ref, eng):
+        for r in reqs:
+            e.submit(Request(**{**r, "prompt": r["prompt"].copy()}))
+    want = {r.rid: r.out_tokens for r in ref.run()}
+
+    cancelled = _drive_with_events(eng, _events(data, reqs))
+    got = {r.rid: r.out_tokens for r in eng.done}
+    assert set(got) == {r["rid"] for r in reqs} - cancelled
+    for rid, toks in got.items():
+        assert toks == want[rid], rid
+    a = eng.allocator
+    assert a.pages_in_use_by_shard == [0, 0]
+    assert a.pages_free_by_shard == [a.pages_per_shard - 1] * 2
+    assert not eng.prefix_index and not eng._held and not a._refs
+    assert all(not p for p in eng.slot_pages)
+
+
 @pytest.mark.skipif(jax.device_count() < 2,
                     reason="sharded-pool fuzz needs >=2 devices (the CI "
                            "8-device leg forces them via XLA_FLAGS)")
